@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Iterable, List, Tuple
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_csv(name: str, header: List[str], rows: Iterable[tuple]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name + ".csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: SISA-scheduled GEMM vs monolithic tiling.
+
+Two measurements per Table-2 shape:
+
+* wall-time of the jitted public op on this host (CPU -> XLA backend;
+  the Pallas path is validated in interpret mode by the tests and is not
+  wall-clock-meaningful on CPU), and
+* the *derived* TPU tile efficiency: useful-FLOP fraction of the SISA
+  block config vs padding the same GEMM to monolithic 128-row tiles —
+  the kernel-level analogue of Fig 4.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit, write_csv
+from repro.kernels import choose_block_config, sisa_matmul
+
+SHAPES = [
+    ("decode_m1", 1, 4864, 896),
+    ("chat_m12", 12, 4864, 896),
+    ("best_m16", 16, 4864, 896),
+    ("fused_m33", 33, 8960, 1536),
+    ("mono_m128", 128, 8192, 3072),
+    ("resid_m150", 150, 8192, 3072),
+    ("lmhead_m16", 16, 151936, 896),
+]
+
+
+def _pad_eff(m: int, bm: int) -> float:
+    padded = ((m + bm - 1) // bm) * bm
+    return m / padded
+
+
+def bench_kernels() -> List[Row]:
+    rows, out = [], []
+    for name, m, n, k in SHAPES:
+        a = jnp.asarray(np.random.default_rng(0).normal(size=(m, k)),
+                        jnp.float32)
+        b = jnp.asarray(np.random.default_rng(1).normal(size=(k, n)),
+                        jnp.float32)
+        f = jax.jit(lambda a, b: sisa_matmul(a, b, "xla"))
+        us = timeit(lambda a=a, b=b: jax.block_until_ready(f(a, b)))
+        cfg = choose_block_config(m, n, k, jnp.bfloat16)
+        # residual-split efficiency for m > 128 (ops-level scale-in)
+        if m > 128 and m % 128:
+            main = (m // 128) * 128
+            resid = m - main
+            rcfg = choose_block_config(resid, n, k, jnp.bfloat16)
+            eff_sisa = m / (main + ((resid + rcfg.bm - 1) // rcfg.bm)
+                            * rcfg.bm)
+        else:
+            eff_sisa = _pad_eff(m, cfg.bm)
+        eff_mono = _pad_eff(m, 128)
+        gain = eff_sisa / eff_mono
+        rows.append((name, m, n, k, cfg.bm, cfg.bn, cfg.bk,
+                     f"{eff_sisa:.3f}", f"{eff_mono:.3f}", f"{gain:.2f}"))
+        out.append((f"kernel_{name}", us,
+                    f"tile_eff {eff_sisa:.2f} vs mono {eff_mono:.2f} "
+                    f"({gain:.1f}x useful-FLOPs)"))
+    write_csv("kernel_bench", ["name", "m", "n", "k", "bm", "bn", "bk",
+                               "eff_sisa", "eff_mono", "gain"], rows)
+    return out

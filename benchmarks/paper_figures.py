@@ -1,0 +1,167 @@
+"""Paper-table/figure benchmarks (Figs 4-7, Tables 2-3).
+
+Each ``bench_*`` function reproduces one artifact, writes its CSV under
+``artifacts/bench/`` and returns summary rows ``(name, us_per_call,
+derived)`` for the consolidated report.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, timeit, write_csv
+from repro.core import (MONOLITHIC_128, SISA_128, TABLE2, area_overhead_vs_tpu,
+                        area_report, plan_gemm, simulate_gemm,
+                        simulate_workload)
+from repro.core.redas import simulate_workload_redas
+from repro.hw.specs import SISA_ASIC, TPU_BASELINE_ASIC
+
+M_SWEEP = list(range(1, 151))
+
+
+def _sweep_model(w, cfg, spec):
+    return [simulate_workload(w.gemms(m), cfg, spec) for m in M_SWEEP]
+
+
+def bench_fig4_speedup() -> List[Row]:
+    """Fig 4: SISA speedup vs monolithic TPU, m = 1..150, 4 LLMs."""
+    t0 = time.perf_counter()
+    rows, best = [], (0.0, "")
+    for name, w in TABLE2.items():
+        sisa = _sweep_model(w, SISA_128, SISA_ASIC)
+        tpu = _sweep_model(w, MONOLITHIC_128, TPU_BASELINE_ASIC)
+        for m, s, t in zip(M_SWEEP, sisa, tpu):
+            sp = t.cycles / s.cycles
+            rows.append((name, m, f"{sp:.4f}", f"{s.cycles:.0f}",
+                         f"{t.cycles:.0f}"))
+            if sp > best[0]:
+                best = (sp, f"{name}@m={m}")
+    write_csv("fig4_speedup", ["model", "m", "speedup", "sisa_cycles",
+                               "tpu_cycles"], rows)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig4_max_speedup", us,
+             f"{best[0]:.2f}x@{best[1]} (paper: up to 8.52x)")]
+
+
+def bench_fig5_edp() -> List[Row]:
+    """Fig 5: normalized EDP (SISA/TPU), m = 1..150."""
+    t0 = time.perf_counter()
+    rows = []
+    best_red, worst_over = 0.0, 0.0
+    for name, w in TABLE2.items():
+        for m in M_SWEEP:
+            g = w.gemms(m)
+            s = simulate_workload(g, SISA_128, SISA_ASIC)
+            t = simulate_workload(g, MONOLITHIC_128, TPU_BASELINE_ASIC)
+            edp = (s.energy_nj * s.cycles) / (t.energy_nj * t.cycles)
+            rows.append((name, m, f"{edp:.4f}"))
+            best_red = max(best_red, 1 - edp)
+            if 112 < m <= 128:
+                worst_over = max(worst_over, edp - 1)
+    write_csv("fig5_edp", ["model", "m", "edp_ratio"], rows)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig5_max_edp_reduction", us,
+             f"{best_red*100:.1f}% (paper: up to 93%)"),
+            ("fig5_worst_edp_overhead", 0.0,
+             f"+{worst_over*100:.2f}% (paper: +8.47%)")]
+
+
+def bench_fig6_redas() -> List[Row]:
+    """Fig 6: SISA speedup vs ReDas (OS reshaping model, see
+    repro.core.redas docstring for the mid-range caveat)."""
+    t0 = time.perf_counter()
+    rows = []
+    best16, best32, worst = 0.0, 0.0, float("inf")
+    for name, w in TABLE2.items():
+        for m in M_SWEEP:
+            g = w.gemms(m)
+            s = simulate_workload(g, SISA_128, SISA_ASIC)
+            r = simulate_workload_redas(g)
+            sp = r.cycles / s.cycles
+            rows.append((name, m, f"{sp:.4f}"))
+            if m <= 16:
+                best16 = max(best16, sp)
+            elif m <= 32:
+                best32 = max(best32, sp)
+            worst = min(worst, sp)
+    write_csv("fig6_redas", ["model", "m", "speedup_vs_redas"], rows)
+    # Ablation: idealized weight-stationary ReDas (brackets the paper's
+    # unpublished mid-range model from the other side).
+    worst_ws = float("inf")
+    for name, w in TABLE2.items():
+        for m in range(33, 51):
+            g = w.gemms(m)
+            s = simulate_workload(g, SISA_128, SISA_ASIC)
+            r = simulate_workload_redas(g, dataflows=("os", "ws"))
+            worst_ws = min(worst_ws, r.cycles / s.cycles)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig6_vs_redas_16x128", us,
+             f"{best16:.2f}x (paper: up to 2.61x)"),
+            ("fig6_vs_redas_32x128", 0.0,
+             f"{best32:.2f}x (paper: up to 1.61x)"),
+            ("fig6_vs_redas_worst", 0.0,
+             f"{worst:.2f}x (paper: 0.74x; see EXPERIMENTS.md note)"),
+            ("fig6_ws_ablation_midrange", 0.0,
+             f"{worst_ws:.2f}x (idealized-WS ReDas bound; paper 0.74x "
+             f"sits between our {worst:.2f} and this)")]
+
+
+def bench_fig7_casestudy() -> List[Row]:
+    """Fig 7: Qwen2.5-0.5B per-layer latency, m=16 (best) / m=33 (worst)."""
+    t0 = time.perf_counter()
+    w = TABLE2["Qwen2.5-0.5B"]
+    rows = []
+    for m in (16, 33):
+        for layer in w.layers:
+            mm, n, k, occ = layer.with_m(m)
+            s = simulate_gemm(mm, n, k, SISA_128, SISA_ASIC)
+            r_cycles = s.cycles * occ
+            t = simulate_gemm(mm, n, k, MONOLITHIC_128, TPU_BASELINE_ASIC)
+            rows.append((m, layer.layer_id, layer.name, occ,
+                         f"{r_cycles:.0f}", f"{t.cycles * occ:.0f}"))
+    write_csv("fig7_casestudy", ["m", "layer_id", "layer", "occurrence",
+                                 "sisa_cycles_weighted",
+                                 "tpu_cycles_weighted"], rows)
+    # The paper's observation: layer 2 dominates at m=16.
+    m16 = [r for r in rows if r[0] == 16]
+    dom = max(m16, key=lambda r: float(r[4]))
+    us = (time.perf_counter() - t0) * 1e6
+    gated = simulate_workload(w.gemms(16), SISA_128, SISA_ASIC)
+    return [("fig7_dominant_layer_m16", us,
+             f"layer{dom[1]}:{dom[2]} (paper: layer 2 / gate-up x48)"),
+            ("fig7_anygated_frac_m16", 0.0,
+             f"{gated.anygated_fraction*100:.0f}% (paper: 44%)")]
+
+
+def bench_table2_shapes() -> List[Row]:
+    """Table 2: the unique GEMM triples per model."""
+    t0 = time.perf_counter()
+    rows = []
+    for name, w in TABLE2.items():
+        for layer in w.layers:
+            rows.append((name, layer.layer_id, layer.name,
+                         f"(m,{layer.n},{layer.k})", layer.occurrence))
+    write_csv("table2_shapes", ["model", "id", "layer", "triple",
+                                "occurrence"], rows)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("table2_gemm_shapes", us, f"{len(rows)} unique GEMMs/4 models")]
+
+
+def bench_table3_area_energy() -> List[Row]:
+    """Table 3 + §4.3 area comparison."""
+    t0 = time.perf_counter()
+    rep = area_report()
+    rows = [(k, f"{v['area_mm2']:.2f}", f"{v['static_nj_per_cycle']:.2f}")
+            for k, v in rep.rows.items()]
+    rows.append(("Total", f"{rep.total_mm2:.2f}",
+                 f"{rep.total_static_nj:.2f}"))
+    write_csv("table3_area_energy", ["component", "area_mm2",
+                                     "static_nj_per_cycle"], rows)
+    ov = area_overhead_vs_tpu()
+    us = (time.perf_counter() - t0) * 1e6
+    return [("table3_total_area", us,
+             f"{rep.total_mm2:.2f}mm2 (paper: 221.27mm2)"),
+            ("table3_area_overhead", 0.0,
+             f"+{ov['total_overhead_frac']*100:.2f}% vs TPU (paper: +5.44%)"),
+            ("table3_sa_share", 0.0,
+             f"{ov['sa_area_share']*100:.1f}% SA (paper: 87.2%)")]

@@ -1,0 +1,30 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV; detailed per-point CSVs land in
+``artifacts/bench/``.  Run: ``PYTHONPATH=src python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_figures import (bench_fig4_speedup, bench_fig5_edp,
+                                          bench_fig6_redas,
+                                          bench_fig7_casestudy,
+                                          bench_table2_shapes,
+                                          bench_table3_area_energy)
+    from benchmarks.kernel_bench import bench_kernels
+    from benchmarks.slab_ablation import bench_slab_ablation
+
+    benches = [bench_table2_shapes, bench_table3_area_energy,
+               bench_fig4_speedup, bench_fig5_edp, bench_fig6_redas,
+               bench_fig7_casestudy, bench_kernels, bench_slab_ablation]
+    print("name,us_per_call,derived")
+    for bench in benches:
+        for (name, us, derived) in bench():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

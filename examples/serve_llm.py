@@ -1,0 +1,56 @@
+"""Serving example: batched requests through the SISA-aware engine.
+
+    PYTHONPATH=src python examples/serve_llm.py
+
+Submits a mixed queue of short/long prompts, serves them with continuous
+batching where the decode batch size is quantized to the slab ladder by
+the cycle simulator (repro.serve.engine), and reports TTFT + the
+scheduler's batch choices.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+
+def main():
+    cfg = smoke_config("qwen2.5-0.5b")
+    print(f"[serve] model {cfg.name}")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=96))
+    decode = jax.jit(make_decode_step(cfg))
+    eng = ServeEngine(cfg, params, prefill_fn=prefill, decode_fn=decode,
+                      cache_init_fn=None, max_batch=8, max_seq=96)
+
+    rng = np.random.default_rng(0)
+    # paper Fig 1a: chatbot prompts, median ~12 tokens, long tail
+    lengths = [12, 8, 41, 12, 5, 30, 12, 64, 9, 12]
+    for i, L in enumerate(lengths):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(2, cfg.vocab_size,
+                                       size=L).astype(np.int32),
+            max_new_tokens=8))
+    t0 = time.time()
+    done = eng.run(max_steps=256)
+    dt = time.time() - t0
+    ttft = eng.stats["ttft"]
+    print(f"[serve] completed {len(done)}/{len(lengths)} requests "
+          f"in {dt*1e3:.0f}ms host time")
+    print(f"[serve] TTFT p50={np.median(ttft)*1e3:.1f}ms "
+          f"p95={np.percentile(ttft, 95)*1e3:.1f}ms")
+    print(f"[serve] decode batch choices (slab-quantized): "
+          f"{eng.stats['batches']}")
+    print(f"[serve] decode steps: {eng.stats['decode_steps']}")
+    assert len(done) == len(lengths)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Fill EXPERIMENTS.md <!-- ROOFLINE_* --> markers from dry-run artifacts.
+
+    PYTHONPATH=src python scripts/gen_experiments_tables.py
+"""
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.analysis.report import load_artifacts, roofline_table, summary_stats
+
+
+def main():
+    base = load_artifacts("artifacts/dryrun")
+    opt = load_artifacts("artifacts/dryrun_opt")
+    doc = open("EXPERIMENTS.md").read()
+
+    single = roofline_table(base, "single_pod")
+    multi = roofline_table(base, "multi_pod")
+    opt_tbl = (
+        "### optimized, single-pod\n\n" + roofline_table(opt, "single_pod")
+        + "\n\n### optimized, multi-pod\n\n"
+        + roofline_table(opt, "multi_pod")
+        + f"\n\nbaseline stats: {summary_stats(base)}\n"
+        + f"optimized stats: {summary_stats(opt)}\n")
+
+    doc = doc.replace("<!-- ROOFLINE_SINGLE -->", single)
+    doc = doc.replace("<!-- ROOFLINE_MULTI -->", multi)
+    doc = doc.replace("<!-- ROOFLINE_OPT -->", opt_tbl)
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("tables inserted:",
+          "single" in doc and "ok")
+
+
+if __name__ == "__main__":
+    main()

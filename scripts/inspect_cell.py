@@ -1,0 +1,65 @@
+"""Deep-dive one dry-run cell: top collectives / dots by mult x bytes.
+
+    PYTHONPATH=src python scripts/inspect_cell.py --arch X --shape Y \
+        --mesh multi_pod --profile baseline
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+from collections import defaultdict
+
+from repro.launch.dryrun import lower_cell
+from repro.analysis import hlo_cost as H
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--profile", default="baseline")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    art, compiled = lower_cell(args.arch, args.shape, args.mesh,
+                               remat=args.remat,
+                               sharding_profile=args.profile)
+    if art["status"] != "ok":
+        print(art)
+        return
+    hlo = compiled.as_text()
+    comps = H.split_computations(hlo)
+    H._mark_fusion_internal(comps)
+    mult = H.compute_multipliers(comps)
+
+    colls = []
+    dots = defaultdict(float)
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            kind, moved = H._collective_moved(op, 16)
+            if kind:
+                colls.append((m * moved, m, kind, op.result_type[:70],
+                              op.line[op.line.find("replica_groups"):][:40]))
+            if op.kind == "dot":
+                dots[op.result_type[:60]] += m * H._dot_flops(op, comp)
+
+    r = art["roofline"]
+    print(f"terms: compute={r['compute_s']:.2f}s memory={r['memory_s']:.2f}s "
+          f"collective={r['collective_s']:.2f}s accum={art.get('accum_steps')}")
+    print(f"\nTOP {args.top} COLLECTIVES (mult x moved bytes):")
+    for moved, m, kind, rt, groups in sorted(colls, reverse=True)[:args.top]:
+        print(f"  {moved/2**30:8.2f}GiB x{m:6.0f} {kind:18} {rt} {groups}")
+    print(f"\nTOP 10 DOT shapes by flops:")
+    for rt, f in sorted(dots.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {f:.3e} {rt}")
+
+
+if __name__ == "__main__":
+    main()

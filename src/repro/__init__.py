@@ -1,0 +1,3 @@
+"""repro: SISA (Scale-In Systolic Array) reproduction + TPU framework."""
+
+__version__ = "1.0.0"

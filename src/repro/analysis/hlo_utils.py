@@ -1,0 +1,100 @@
+"""HLO-text parsing: per-device collective traffic from a compiled module.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+optimized HLO: every ``all-gather``/``all-reduce``/``reduce-scatter``/
+``all-to-all``/``collective-permute`` op contributes its per-device moved
+bytes, estimated from the result shape and the replica-group size ``g``:
+
+    all-gather          result x (g-1)/g
+    all-reduce          2 x result x (g-1)/g        (RS + AG phases)
+    reduce-scatter      result x (g-1)              (input = result x g)
+    all-to-all          result x (g-1)/g
+    collective-permute  result
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# iota format: replica_groups=[G,g]<=[N] ; explicit: {{0,1},{2,3},...}
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]
+    ops: List[Tuple[str, str, float, int]]   # (kind, result_type, bytes, g)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.per_op.values())
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    per_op: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    ops = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls.startswith("%") and " = " not in ls:
+            continue
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        if "-done(" in ls:       # avoid double count of async pairs
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(result_type)
+        g = _group_size(ls, default_group)
+        if kind == "all-gather":
+            moved = rb * (g - 1) / g
+        elif kind == "all-reduce":
+            moved = 2.0 * rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = rb * (g - 1)
+        elif kind == "all-to-all":
+            moved = rb * (g - 1) / g
+        else:
+            moved = float(rb)
+        per_op[kind] += moved
+        ops.append((kind, result_type[:60], moved, g))
+    return CollectiveStats(per_op=per_op, ops=ops)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,81 @@
+"""Roofline report generator: artifacts/dryrun/*.json -> markdown tables.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_artifacts(d: str) -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(arts: List[dict], mesh: str) -> str:
+    rows = ["| arch | cell | compute | memory | collective | bottleneck | "
+            "MODEL_FLOPS/HLO | peak frac | mem/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    arts = [a for a in arts if a.get("mesh") == mesh]
+    arts.sort(key=lambda a: (a["arch"], order.get(a["cell"], 9)))
+    for a in arts:
+        if a["status"] == "skipped":
+            rows.append(f"| {a['arch']} | {a['cell']} | — | — | — | "
+                        f"skipped: {a['reason'][:45]}… | — | — | — |")
+            continue
+        if a["status"] != "ok":
+            rows.append(f"| {a['arch']} | {a['cell']} | — | — | — | "
+                        f"ERROR | — | — | — |")
+            continue
+        r = a["roofline"]
+        mem = a["memory_analysis"].get("peak_bytes_estimate", 0) / 2**30
+        rows.append(
+            f"| {a['arch']} | {a['cell']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | "
+            f"{r['hw_peak_frac']:.2f} | {mem:.1f}GB |")
+    return "\n".join(rows)
+
+
+def summary_stats(arts: List[dict]) -> Dict[str, object]:
+    ok = [a for a in arts if a["status"] == "ok"]
+    sk = [a for a in arts if a["status"] == "skipped"]
+    er = [a for a in arts if a["status"] == "error"]
+    bn = {}
+    for a in ok:
+        bn[a["roofline"]["bottleneck"]] = bn.get(
+            a["roofline"]["bottleneck"], 0) + 1
+    return {"ok": len(ok), "skipped": len(sk), "errors": len(er),
+            "bottlenecks": bn}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args(argv)
+    arts = load_artifacts(args.dir)
+    print(f"## Roofline — {args.mesh}\n")
+    print(roofline_table(arts, args.mesh))
+    print()
+    print(summary_stats(arts))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint import ckpt
+from repro.checkpoint.ckpt import latest_step_dir, restore, save, save_step
+
+__all__ = ["ckpt", "latest_step_dir", "restore", "save", "save_step"]

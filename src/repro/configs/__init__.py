@@ -1,0 +1,9 @@
+"""Architecture and shape-cell configs."""
+from repro.configs.base import (ModelConfig, MoEConfig, ShapeCell,
+                                SHAPE_CELLS, cell_applicable)
+from repro.configs.registry import (ASSIGNED_ARCHS, all_configs, get_config,
+                                    smoke_config)
+
+__all__ = ["ModelConfig", "MoEConfig", "ShapeCell", "SHAPE_CELLS",
+           "cell_applicable", "ASSIGNED_ARCHS", "all_configs", "get_config",
+           "smoke_config"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch command-r-plus`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import COMMAND_R_PLUS as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch dbrx-132b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import DBRX_132B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch gemma3-1b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import GEMMA3_1B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch granite-20b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import GRANITE_20B as CONFIG
+
+__all__ = ["CONFIG"]

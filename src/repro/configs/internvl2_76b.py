@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch internvl2-76b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import INTERNVL2_76B as CONFIG
+
+__all__ = ["CONFIG"]

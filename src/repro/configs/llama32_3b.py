@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch llama32-3b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import LLAMA32_3B as CONFIG
+
+__all__ = ["CONFIG"]

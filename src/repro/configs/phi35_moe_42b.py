@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch phi35-moe`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import PHI35_MOE as CONFIG
+
+__all__ = ["CONFIG"]

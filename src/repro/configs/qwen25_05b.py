@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch qwen25-05b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import QWEN25_05B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch qwen25-15b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import QWEN25_15B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch qwen25-7b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import QWEN25_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch recurrentgemma-2b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import RECURRENTGEMMA_2B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch rwkv6-3b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import RWKV6_3B as CONFIG
+
+__all__ = ["CONFIG"]

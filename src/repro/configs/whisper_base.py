@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch whisper-base`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import WHISPER_BASE as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config: ``--arch yi-6b`` (canonical definition in repro.configs.registry)."""
+from repro.configs.registry import YI_6B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,28 @@
+"""SISA core: the paper's contribution (§3) + evaluation models (§4).
+
+Public surface:
+
+* ``SlabArrayConfig`` / ``SISA_128`` / ``MONOLITHIC_128`` — array geometry.
+* ``plan_gemm`` — the §3.2 tiling/scheduling engine.
+* ``simulate_gemm`` / ``simulate_workload`` — OS-dataflow cycle+energy model.
+* ``simulate_gemm_redas`` — the ReDas reconfigurable baseline.
+* ``sisa_matmul`` — the JAX op (Pallas-backed) that applies SISA's
+  shape-adaptive tiling on TPU (see ``repro.core.sisa_op``).
+"""
+from repro.core.slab import (ExecMode, SlabArrayConfig, SISA_128,
+                             MONOLITHIC_128)
+from repro.core.scheduler import ExecutionPlan, Phase, Tile, plan_gemm
+from repro.core.simulator import (SimResult, simulate_gemm,
+                                  simulate_workload, tile_cycles)
+from repro.core.redas import simulate_gemm_redas, simulate_workload_redas
+from repro.core.energy import area_report, area_overhead_vs_tpu, edp_ratio
+from repro.core.workloads import TABLE2, LLMWorkload
+
+__all__ = [
+    "ExecMode", "SlabArrayConfig", "SISA_128", "MONOLITHIC_128",
+    "ExecutionPlan", "Phase", "Tile", "plan_gemm",
+    "SimResult", "simulate_gemm", "simulate_workload", "tile_cycles",
+    "simulate_gemm_redas", "simulate_workload_redas",
+    "area_report", "area_overhead_vs_tpu", "edp_ratio",
+    "TABLE2", "LLMWorkload",
+]

@@ -1,0 +1,54 @@
+"""Area/energy reporting (paper Table 3 + §4.3 'Area Comparison')."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.hw.specs import AsicSpec, SISA_ASIC, TPU_BASELINE_ASIC
+
+
+@dataclasses.dataclass(frozen=True)
+class AreaReport:
+    rows: Dict[str, Dict[str, float]]
+    total_mm2: float
+    total_static_nj: float
+
+
+def area_report(spec: AsicSpec = SISA_ASIC) -> AreaReport:
+    rows = {
+        "SA 128x128": {"area_mm2": spec.sa_area_mm2,
+                       "static_nj_per_cycle": spec.sa_static_nj},
+        "Global buffer (8MB)": {"area_mm2": spec.global_buf_area_mm2,
+                                "static_nj_per_cycle": spec.global_buf_static_nj},
+        "Slab buffers (8KB+64KB)": {"area_mm2": spec.slab_buf_area_mm2,
+                                    "static_nj_per_cycle": spec.slab_buf_static_nj},
+        "Output buffer (2MB)": {"area_mm2": spec.out_buf_area_mm2,
+                                "static_nj_per_cycle": spec.out_buf_static_nj},
+    }
+    return AreaReport(rows=rows, total_mm2=spec.total_area_mm2,
+                      total_static_nj=spec.total_static_nj)
+
+
+def area_overhead_vs_tpu() -> Dict[str, float]:
+    """§4.3: SISA adds ~5.44 % total chip area over the TPU baseline."""
+    sisa, tpu = SISA_ASIC, TPU_BASELINE_ASIC
+    pe_overhead = (sisa.sa_area_mm2 - tpu.sa_area_mm2) / tpu.total_area_mm2
+    sram_sisa = (sisa.global_buf_area_mm2 + sisa.slab_buf_area_mm2
+                 + sisa.out_buf_area_mm2)
+    sram_tpu = tpu.global_buf_area_mm2 + tpu.out_buf_area_mm2
+    sram_overhead = (sram_sisa - sram_tpu) / tpu.total_area_mm2
+    total = (sisa.total_area_mm2 - tpu.total_area_mm2) / tpu.total_area_mm2
+    return {
+        "pe_array_overhead_frac": pe_overhead,       # paper: ~2.7 %
+        "sram_overhead_frac": sram_overhead,         # paper: ~2.74 %
+        "total_overhead_frac": total,                # paper: ~5.44 %
+        "sisa_total_mm2": sisa.total_area_mm2,
+        "tpu_total_mm2": tpu.total_area_mm2,
+        "sa_area_share": sisa.sa_area_mm2 / sisa.total_area_mm2,  # ~87.2 %
+    }
+
+
+def edp_ratio(sisa_energy_nj: float, sisa_cycles: float,
+              tpu_energy_nj: float, tpu_cycles: float) -> float:
+    """Normalized EDP (SISA / TPU). < 1 means SISA better."""
+    return (sisa_energy_nj * sisa_cycles) / (tpu_energy_nj * tpu_cycles)

@@ -1,0 +1,90 @@
+"""ReDas baseline (Han et al., IEEE TC 2024) — reshaping + multi-dataflow.
+
+ReDas supports *fine-grained reshaping and multiple dataflows* on one
+systolic array, at the cost of not activating all PEs in every
+configuration (§2, Table 1).  The paper's comparison points give its
+configuration ladder for a 16 K-PE budget:
+
+    128x128 (16384 PEs), 64x256 (16384), 32x384 (12288), 16x448 (7168).
+
+Two timing models per configuration, ReDas picks the per-GEMM best
+(an optimistic oracle, mirroring the paper's own choice to "abstract
+certain control and data-movement overheads, making the comparison
+favorable to ReDas"):
+
+* **OS** — same serial-tile output-stationary model as SISA/TPU
+  (``repro.core.simulator``), drain through the reshaped height.
+* **WS** — weight-stationary: a ``h x w`` weight tile stays resident, M
+  activation rows stream through; with double-buffered weight reload the
+  steady-state tile cost is ``max(M, h)``.  This is what gives ReDas its
+  mid-range (m ~ 33-50) advantage on large-K layers in Fig. 6.
+
+The default is OS-only, which reproduces the paper's small-m
+(2.61x/1.61x), m=64 and m>128 comparison points.  The paper additionally
+reports ReDas ahead by up to 1.36x in the mid-range (m ~ 33-50, large
+models) — an artifact of its abstracted-favorable ReDas model whose
+details are not published; enabling ``dataflows=("os", "ws")`` shows the
+flip but *overshoots* it (idealized WS with free weight reload wins
+everywhere m >= 33), so we report the OS-only comparison and flag the
+mid-range divergence in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+from repro.hw.specs import AsicSpec, TPU_BASELINE_ASIC
+from repro.core.simulator import SimResult, simulate_gemm
+from repro.core.slab import SlabArrayConfig
+
+REDAS_CONFIGS: Tuple[Tuple[int, int], ...] = (
+    (128, 128), (64, 256), (32, 384), (16, 448))
+
+
+def _cfg(h: int, w: int) -> SlabArrayConfig:
+    return SlabArrayConfig(array_h=h, array_w=w, n_slabs=1,
+                           power_gating=False)
+
+
+def _ws_cycles(m: int, n: int, k: int, h: int, w: int) -> float:
+    """Weight-stationary timing on a reshaped h x w array.
+
+    K is tiled by h (stationary rows), N by w.  Partial sums accumulate in
+    the output buffer across K tiles.  Steady-state per-tile cost is
+    max(M, h): M cycles to stream activations, lower-bounded by the h
+    cycles needed to shift in the next weight tile.
+    """
+    n_tiles = math.ceil(k / h) * math.ceil(n / w)
+    fill = (h - 1) + (w - 1)
+    drain = h
+    return fill + n_tiles * max(m, h) + drain
+
+
+def simulate_gemm_redas(m: int, n: int, k: int,
+                        spec: AsicSpec = TPU_BASELINE_ASIC,
+                        dataflows: Sequence[str] = ("os",)) -> SimResult:
+    best: SimResult | None = None
+    for h, w in REDAS_CONFIGS:
+        if "os" in dataflows:
+            r = simulate_gemm(m, n, k, cfg=_cfg(h, w), spec=spec)
+            if best is None or r.cycles < best.cycles:
+                best = r
+        if "ws" in dataflows:
+            cyc = _ws_cycles(m, n, k, h, w)
+            if best is None or cyc < best.cycles:
+                # Latency-only result (the paper omits ReDas EDP because
+                # its model favors ReDas on latency; we do the same).
+                best = SimResult(cycles=cyc, macs=m * n * k, n_pes=h * w)
+    assert best is not None
+    return best
+
+
+def simulate_workload_redas(gemms: List[tuple],
+                            spec: AsicSpec = TPU_BASELINE_ASIC,
+                            dataflows: Sequence[str] = ("os",)) -> SimResult:
+    total = SimResult()
+    for (m, n, k, occ) in gemms:
+        r = simulate_gemm_redas(m, n, k, spec, dataflows)
+        total += r.scaled(occ)
+        total.n_pes = max(total.n_pes, r.n_pes)
+    return total

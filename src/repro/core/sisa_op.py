@@ -1,0 +1,39 @@
+"""JAX-facing SISA op: scheduling metadata + the kernel entry point.
+
+``plan_for_arrays`` ties the two halves of the repo together: given the
+actual operand shapes of a JAX matmul it returns both the TPU block
+configuration (what the Pallas kernel will run) and the paper's slab
+execution plan (what the ASIC would do), so benchmarks can report them
+side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.scheduler import ExecutionPlan, plan_gemm
+from repro.core.slab import SISA_128, SlabArrayConfig
+from repro.kernels.sisa_gemm import BlockConfig, choose_block_config
+from repro.kernels.ops import sisa_matmul, sisa_einsum_2d
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    m: int
+    n: int
+    k: int
+    block: BlockConfig          # TPU kernel tiling
+    slabs: ExecutionPlan        # paper ASIC schedule
+
+
+def plan_for_arrays(m: int, n: int, k: int, dtype=jnp.bfloat16,
+                    cfg: Optional[SlabArrayConfig] = None) -> GemmPlan:
+    cfg = cfg or SISA_128
+    return GemmPlan(m=m, n=n, k=k,
+                    block=choose_block_config(m, n, k, dtype),
+                    slabs=plan_gemm(m, n, k, cfg))
+
+
+__all__ = ["GemmPlan", "plan_for_arrays", "sisa_matmul", "sisa_einsum_2d"]

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (MeshSharder, batch_specs,
+                                         mesh_axes_for, opt_state_specs,
+                                         param_specs, to_named)
+from repro.distributed.fault import StragglerWatchdog, plan_elastic_mesh
+from repro.distributed.compression import compress_grads, init_error_state
+
+__all__ = ["MeshSharder", "batch_specs", "mesh_axes_for", "opt_state_specs",
+           "param_specs", "to_named", "StragglerWatchdog",
+           "plan_elastic_mesh", "compress_grads", "init_error_state"]

@@ -1,0 +1,47 @@
+"""Gradient compression with error feedback.
+
+The cross-replica gradient reduction is the dominant DCN/ICI consumer at
+pod scale; compressing it to bf16 (or int8) halves (quarters) that term.
+Error feedback keeps an f32 residual so the compression bias does not
+accumulate across steps (Seide et al. / EF-SGD family):
+
+    c_t  = Q(g_t + e_{t-1})
+    e_t  = (g_t + e_{t-1}) - c_t
+
+Plugs into the trainer as a gradient transform; off by default (the
+paper-faithful path does full-precision reductions).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if kind == "int8":
+        # symmetric per-tensor scale
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127)
+        return q * scale
+    raise ValueError(kind)
+
+
+def compress_grads(grads: PyTree, err: Optional[PyTree], kind: str = "bf16"
+                   ) -> Tuple[PyTree, PyTree]:
+    """Returns (compressed grads, new error state)."""
+    if err is None:
+        err = init_error_state(grads)
+    summed = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, err)
+    comp = jax.tree.map(lambda s: _quantize(s, kind), summed)
+    new_err = jax.tree.map(lambda s, c: s - c, summed, comp)
+    return comp, new_err

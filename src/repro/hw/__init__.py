@@ -1,0 +1,3 @@
+from repro.hw.specs import TPU_V5E, SISA_ASIC, TPU_BASELINE_ASIC, ChipSpec, AsicSpec
+
+__all__ = ["TPU_V5E", "SISA_ASIC", "TPU_BASELINE_ASIC", "ChipSpec", "AsicSpec"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the GEMM hot spots (validated with interpret=True).
+
+* ``sisa_gemm`` — SISA-scheduled output-stationary GEMM (the paper's
+  contribution, adapted to MXU tiles; DESIGN.md §2b).
+* ``moe_gemm`` — grouped per-expert GEMM used by the MoE layers.
+* ``ops`` — padded/differentiable wrappers; ``ref`` — pure-jnp oracles.
+"""
+from repro.kernels.sisa_gemm import BlockConfig, choose_block_config, sisa_gemm
+from repro.kernels.ops import sisa_matmul, sisa_einsum_2d, set_default_backend
+
+__all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
+           "sisa_matmul", "sisa_einsum_2d", "set_default_backend"]

@@ -1,0 +1,135 @@
+"""Public, differentiable entry points for the SISA kernels.
+
+``sisa_matmul`` is the op the model zoo's ``Linear`` layers call.  It
+
+* pads ragged operands to the scheduled block grid and slices the result,
+* picks the block configuration with the SISA scheduler
+  (:func:`repro.kernels.sisa_gemm.choose_block_config`),
+* defines a custom VJP whose backward GEMMs are themselves
+  SISA-scheduled (dA = dC @ B^T is exactly as skewed as the forward),
+* falls back to plain XLA ``jnp.dot`` (`backend="xla"`) — used under
+  ``shard_map``/GSPMD tracing where an explicit kernel would block
+  sharding propagation, for the dry-run, and as a CPU path.  The Pallas
+  path (`backend="pallas"`) targets TPU and runs under ``interpret=True``
+  on CPU for validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sisa_gemm import (BlockConfig, choose_block_config,
+                                     sisa_gemm)
+
+_DEFAULT_BACKEND = "xla"
+
+
+def set_default_backend(backend: str) -> None:
+    global _DEFAULT_BACKEND
+    assert backend in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_BACKEND = backend
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _pallas_matmul_single(a: jax.Array, b: jax.Array,
+                          interpret: bool) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    cfg = choose_block_config(m, n, k, a.dtype)
+    mp = ((m + cfg.bm - 1) // cfg.bm) * cfg.bm
+    np_ = ((n + cfg.bn - 1) // cfg.bn) * cfg.bn
+    kp = ((k + cfg.bk - 1) // cfg.bk) * cfg.bk
+    out = sisa_gemm(_pad_to(a, mp, kp), _pad_to(b, kp, np_), cfg,
+                    interpret=interpret)
+    return out[:m, :n]
+
+
+def _pallas_matmul(a: jax.Array, b: jax.Array, interpret: bool) -> jax.Array:
+    """§3.2 'M > array height': full-height main pass + scale-in residual.
+
+    The monolithic baseline pads the ragged tail to a full 128-row tile
+    (up to 127 wasted rows); SISA instead re-schedules the residual with
+    its own slab-sized tiles.
+    """
+    m = a.shape[0]
+    if m > 128 and m % 128 != 0:
+        main = (m // 128) * 128
+        c_main = _pallas_matmul_single(a[:main], b, interpret)
+        c_res = _pallas_matmul_single(a[main:], b, interpret)
+        return jnp.concatenate([c_main, c_res], axis=0)
+    return _pallas_matmul_single(a, b, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def sisa_matmul(a: jax.Array, b: jax.Array,
+                backend: Optional[str] = None) -> jax.Array:
+    """C = A @ B with SISA shape-adaptive tiling.  a: (M, K), b: (K, N)."""
+    return _forward(a, b, backend)
+
+
+def _forward(a, b, backend):
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "xla":
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    return _pallas_matmul(a, b, interpret=(backend == "pallas_interpret"))
+
+
+def _fwd(a, b, backend):
+    return _forward(a, b, backend), (a, b)
+
+
+def _bwd(backend, res, dc):
+    a, b = res
+    # dA[M,K] = dC[M,N] @ B^T[N,K]  — same M-skew as the forward GEMM.
+    da = _forward(dc, b.T, backend)
+    # dB[K,N] = A^T[K,M] @ dC[M,N]  — M becomes the contraction dim.
+    db = _forward(a.T, dc, backend)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+sisa_matmul.defvjp(_fwd, _bwd)
+
+
+# When True (default), ND inputs contract through dot_general keeping
+# their leading dims; when False, they are flattened to 2D and reshaped
+# back.  Flattening *looks* equivalent but merges sharded batch x seq
+# dims, which GSPMD cannot re-shard in reverse — it falls back to
+# "involuntary full rematerialization" (replicating full-microbatch
+# gradients before every model-axis reduction).  Measured on
+# command-r-plus train_4k multi-pod: the flattened path moves 17 TB/step
+# of replicated f32 grads (EXPERIMENTS.md §Perf #B, iteration 1).
+PRESERVE_DIMS = {"enabled": True}
+
+
+def set_preserve_dims(enabled: bool) -> None:
+    PRESERVE_DIMS["enabled"] = enabled
+
+
+def _nd_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    acc = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def sisa_einsum_2d(x: jax.Array, w: jax.Array,
+                   backend: Optional[str] = None) -> jax.Array:
+    """(..., K) @ (K, N) -> (..., N) through the SISA op."""
+    bk = backend or _DEFAULT_BACKEND
+    if PRESERVE_DIMS["enabled"] and bk == "xla" and x.ndim > 2:
+        # dim-preserving path: GSPMD keeps (batch, seq) shardings intact;
+        # the SISA scheduling story is unchanged (same contraction).
+        return _nd_matmul(x, w)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    out = sisa_matmul(x.reshape(-1, k), w, backend)
+    return out.reshape(*lead, w.shape[-1])

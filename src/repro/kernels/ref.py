@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation, result in A's dtype."""
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return acc.astype(a.dtype)
+
+
+def grouped_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Batched per-expert GEMM: (E, C, d) @ (E, d, f) -> (E, C, f)."""
+    acc = jnp.einsum("ecd,edf->ecf", x, w,
+                     preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)

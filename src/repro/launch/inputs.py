@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no
+allocation) — weak-type-correct and shardable."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import init_cache, init_params
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def batch_structs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    act_dtype = jnp.dtype(cfg.param_dtype)
+    if cfg.enc_dec:
+        # seq_len applies to the encoder (source frames); decoder is the
+        # structural max (DESIGN.md §4).
+        return {
+            "frontend_embeds": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                    act_dtype),
+            "tokens": jax.ShapeDtypeStruct((b, cfg.dec_max_len), jnp.int32),
+        }
+    if cfg.frontend is not None:
+        batch = {
+            "frontend_embeds": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                    act_dtype),
+        }
+        if cell.step == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return batch
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def params_structs(cfg: ModelConfig) -> PyTree:
+    init = functools.partial(init_params, cfg)
+    return jax.eval_shape(init, jax.random.PRNGKey(0))
+
+
+def opt_structs(params: PyTree) -> PyTree:
+    return jax.eval_shape(adamw.init_state, params)
+
+
+def cache_structs(cfg: ModelConfig, cell: ShapeCell) -> PyTree:
+    b = cell.global_batch
+    if cfg.enc_dec:
+        fn = functools.partial(init_cache, cfg, b, cfg.dec_max_len,
+                               enc_len=cell.seq_len)
+    else:
+        fn = functools.partial(init_cache, cfg, b, cell.seq_len)
+    return jax.eval_shape(fn)
+
+
+def decode_structs(cfg: ModelConfig, cell: ShapeCell
+                   ) -> Tuple[Any, Any, Any]:
+    """(tokens, pos) structs + cache structs for a decode cell."""
+    b = cell.global_batch
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, pos, cache_structs(cfg, cell)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """All inputs for the cell's step kind (the task-spec entry point)."""
+    if cell.step == "train":
+        params = params_structs(cfg)
+        return {"params": params, "opt_state": opt_structs(params),
+                "batch": batch_structs(cfg, cell)}
+    if cell.step == "prefill":
+        return {"params": params_structs(cfg),
+                "batch": batch_structs(cfg, cell)}
+    tokens, pos, caches = decode_structs(cfg, cell)
+    return {"params": params_structs(cfg), "caches": caches,
+            "tokens": tokens, "pos": pos}

@@ -1,0 +1,53 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+On a real TPU pod slice this binary is launched once per host (JAX
+multi-process); the mesh spans all hosts and the data pipeline shards by
+``jax.process_index()``.  On CPU it runs the same code path on the local
+device (use --smoke to shrink the model).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.optim import adamw
+from repro.train import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"[launch.train] arch={cfg.name} params~{cfg.params_count()/1e6:.0f}M "
+          f"devices={jax.device_count()} processes={jax.process_count()}")
+    tcfg = TrainerConfig(steps=args.steps, global_batch=args.batch,
+                         seq_len=args.seq, accum_steps=args.accum,
+                         remat=args.remat, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+    opt = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps)
+    out = Trainer(cfg, tcfg, opt_cfg=opt).run()
+    print(f"[launch.train] done: loss {out['first_loss']:.3f} -> "
+          f"{out['final_loss']:.3f}; stragglers {out['stragglers']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,148 @@
+"""Shared model substrate: linears (SISA-backed), norms, RoPE, embeddings.
+
+Parameters are plain pytrees (nested dicts of jax.Array) so that
+``jax.eval_shape`` over the init functions yields allocation-free
+ShapeDtypeStructs for the dry-run, and sharding specs can be attached by
+path (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import sisa_einsum_2d
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Sharder hook: the distributed layer injects activation-sharding
+# constraints through this interface; default is identity (single device).
+# --------------------------------------------------------------------------
+class Sharder:
+    def constrain(self, x: Array, role: str) -> Array:   # noqa: ARG002
+        return x
+
+
+IDENTITY_SHARDER = Sharder()
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * (1.0 / math.sqrt(dim))).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Linear: every projection in the zoo routes through the SISA op.
+# --------------------------------------------------------------------------
+def linear_init(key, in_dim: int, out_dim: int, dtype, use_bias: bool):
+    p = {"w": dense_init(key, in_dim, out_dim, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear_apply(p, x: Array, backend: Optional[str] = None) -> Array:
+    y = sisa_einsum_2d(x, p["w"], backend)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                          # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding with padded vocab (sharding divisibility, DESIGN.md §5)
+# --------------------------------------------------------------------------
+VOCAB_PAD_MULTIPLE = 2048    # model-axis (<=16) x lanes (128)
+
+
+def padded_vocab(vocab: int) -> int:
+    return ((vocab + VOCAB_PAD_MULTIPLE - 1) // VOCAB_PAD_MULTIPLE
+            ) * VOCAB_PAD_MULTIPLE
+
+
+def embedding_init(key, vocab: int, dim: int, dtype):
+    return {"table": embed_init(key, padded_vocab(vocab), dim, dtype)}
+
+
+def embedding_lookup(p, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_logits(table: Array, x: Array, vocab: int) -> Array:
+    """x: (..., d) -> logits (..., vocab_padded); padding rows masked."""
+    logits = sisa_einsum_2d(x, table.T)
+    pad_mask = jnp.arange(table.shape[0]) >= vocab
+    return jnp.where(pad_mask, jnp.finfo(jnp.float32).min, logits)
+
+
+def activation(name: str) -> Callable[[Array], Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+# --------------------------------------------------------------------------
+# Dense MLP (SwiGLU or plain)
+# --------------------------------------------------------------------------
+def mlp_init(key, d: int, ff: int, dtype, gated: bool, use_bias: bool):
+    ks = jax.random.split(key, 3)
+    p = {"up": linear_init(ks[0], d, ff, dtype, use_bias),
+         "down": linear_init(ks[1], ff, d, dtype, use_bias)}
+    if gated:
+        p["gate"] = linear_init(ks[2], d, ff, dtype, use_bias)
+    return p
+
+
+def mlp_apply(p, x: Array, act: str, sharder: Sharder = IDENTITY_SHARDER) -> Array:
+    up = linear_apply(p["up"], x)
+    if "gate" in p:
+        up = activation(act)(linear_apply(p["gate"], x)) * up
+    else:
+        up = activation(act)(up)
+    up = sharder.constrain(up, "mlp_hidden")
+    return linear_apply(p["down"], up)

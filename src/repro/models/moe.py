@@ -1,0 +1,218 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Token-choice top-k routing with per-expert capacity (Switch-style
+position-in-expert cumsum).  Expert weights are sharded over the mesh
+``model`` axis (EP); tokens stay sharded over the batch axes and
+replicated over ``model``, each rank computes *its* experts for all local
+tokens and the outputs are ``psum``-combined — collectives are explicit
+via ``shard_map``, no GSPMD guessing (DESIGN.md §5).
+
+The per-expert GEMM batch is ``(E_local, capacity, d)`` — exactly the
+small-and-variable-M skewed GEMM regime SISA targets (DESIGN.md §4);
+on TPU it lowers through ``repro.kernels.moe_gemm`` tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import Array, activation, dense_init
+
+
+def moe_init(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "up": jnp.stack([dense_init(k, d, ff, dtype)
+                         for k in jax.random.split(ks[1], e)]),
+        "down": jnp.stack([dense_init(k, ff, d, dtype)
+                           for k in jax.random.split(ks[2], e)]),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = jnp.stack([dense_init(k, d, ff, dtype)
+                               for k in jax.random.split(ks[3], e)])
+    return p
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int,
+              factor: float) -> int:
+    cap = math.ceil(top_k * n_tokens / n_experts * factor)
+    return max(8, ((cap + 7) // 8) * 8)          # sublane-aligned
+
+
+def _moe_local(x: Array, p, cfg, act: str, e_offset: int, e_local: int,
+               model_axis: Optional[str]) -> Tuple[Array, Array]:
+    """Per-shard MoE. x: (B_loc, S, d) replicated over the model axis."""
+    b, s, d = x.shape
+    n = b * s
+    moe_cfg = cfg.moe
+    e = moe_cfg.n_experts
+    cap = _capacity(n, e, moe_cfg.top_k, moe_cfg.capacity_factor)
+    xt = x.reshape(n, d)
+
+    gates = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(gates, axis=-1)
+    topw, topi = jax.lax.top_k(probs, moe_cfg.top_k)      # (n, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    flat_e = topi.reshape(-1)                             # (n*k,)
+    flat_w = topw.reshape(-1)
+    tok_of = jnp.arange(n * moe_cfg.top_k) // moe_cfg.top_k
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    keep = pos < cap
+    is_local = (flat_e >= e_offset) & (flat_e < e_offset + e_local) & keep
+    le = jnp.clip(flat_e - e_offset, 0, e_local - 1)
+    lp = jnp.clip(pos, 0, cap - 1)
+
+    # Dispatch: (E_loc, cap, d) buffer; masked pairs contribute zeros.
+    vals = jnp.where(is_local[:, None], xt[tok_of], 0).astype(x.dtype)
+    buf = jnp.zeros((e_local, cap, d), x.dtype).at[le, lp].add(vals)
+
+    # Expert FFN (grouped GEMM — the SISA skew case).
+    h = jnp.einsum("ecd,edf->ecf", buf, p["up"],
+                   preferred_element_type=jnp.float32)
+    if "gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["gate"],
+                       preferred_element_type=jnp.float32)
+        h = activation(act)(g) * h
+    else:
+        h = activation(act)(h)
+    out_e = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["down"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # Combine: gather each pair's expert output, weight, sum over k.
+    pair_out = out_e[le, lp] * (is_local * flat_w)[:, None].astype(x.dtype)
+    y = jnp.sum(pair_out.reshape(n, moe_cfg.top_k, d), axis=1)
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+    # Aux: load-balancing loss ingredients (mean prob x mean assignment).
+    density = jnp.mean(jax.nn.one_hot(topi, e, dtype=jnp.float32),
+                       axis=(0, 1))
+    aux = jnp.sum(jnp.mean(probs, axis=0) * density) * e
+    return y.reshape(b, s, d), aux
+
+
+# "psum": tokens replicated over the model axis, each rank computes its
+#         experts for all tokens, outputs psum-combined (robust; decode).
+# "all_to_all": tokens sequence-sharded over the model axis; dispatch
+#         buffers exchanged with two all_to_alls (canonical EP — ~6x less
+#         collective traffic and 1/ms the dispatch compute; §Perf #B).
+EP_IMPL = {"impl": "psum"}
+
+
+def set_ep_impl(impl: str) -> None:
+    assert impl in ("psum", "all_to_all")
+    EP_IMPL["impl"] = impl
+
+
+def _expert_ffn(buf: Array, p, act: str) -> Array:
+    """(E_loc, C, d) -> (E_loc, C, d) through the local experts."""
+    h = jnp.einsum("ecd,edf->ecf", buf, p["up"],
+                   preferred_element_type=jnp.float32)
+    if "gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["gate"],
+                       preferred_element_type=jnp.float32)
+        h = activation(act)(g) * h
+    else:
+        h = activation(act)(h)
+    return jnp.einsum("ecf,efd->ecd", h.astype(buf.dtype), p["down"],
+                      preferred_element_type=jnp.float32).astype(buf.dtype)
+
+
+def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
+             ) -> Tuple[Array, Array]:
+    """All-to-all EP over sequence-sharded tokens. x: (B, S_loc, d)."""
+    b, s, d = x.shape
+    n = b * s
+    moe_cfg = cfg.moe
+    e = moe_cfg.n_experts
+    cap = _capacity(n, e, moe_cfg.top_k, moe_cfg.capacity_factor)
+    xt = x.reshape(n, d)
+
+    gates = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(gates, axis=-1)
+    topw, topi = jax.lax.top_k(probs, moe_cfg.top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    flat_e = topi.reshape(-1)
+    flat_w = topw.reshape(-1)
+    tok_of = jnp.arange(n * moe_cfg.top_k) // moe_cfg.top_k
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    keep = pos < cap
+    lp = jnp.clip(pos, 0, cap - 1)
+    vals = jnp.where(keep[:, None], xt[tok_of], 0).astype(x.dtype)
+    buf = jnp.zeros((e, cap, d), x.dtype).at[flat_e, lp].add(vals)
+
+    # exchange: (E, C, d) -> (E/ms, ms*C, d): every rank keeps its experts
+    buf = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=1,
+                             tiled=True)
+    out = _expert_ffn(buf, p, act)
+    out = jax.lax.all_to_all(out, model_axis, split_axis=1, concat_axis=0,
+                             tiled=True)                     # back to (E,C,d)
+
+    pair_out = out[flat_e, lp] * (keep * flat_w)[:, None].astype(x.dtype)
+    y = jnp.sum(pair_out.reshape(n, moe_cfg.top_k, d), axis=1)
+    density = jnp.mean(jax.nn.one_hot(topi, e, dtype=jnp.float32),
+                       axis=(0, 1))
+    aux = jnp.sum(jnp.mean(probs, axis=0) * density) * e
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(p, x: Array, cfg, *, mesh=None,
+              batch_axes: Sequence[str] = (),
+              model_axis: str = "model") -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss).  EP over ``model_axis`` if a mesh
+    with that axis (size > 1) is supplied."""
+    e = cfg.moe.n_experts
+    if mesh is None or model_axis not in mesh.axis_names \
+            or mesh.shape[model_axis] == 1:
+        y, aux = _moe_local(x, p, cfg, cfg.act, 0, e, None)
+        return y, aux
+
+    ms = mesh.shape[model_axis]
+    assert e % ms == 0, f"{e} experts not divisible by model axis {ms}"
+    e_local = e // ms
+    use_a2a = (EP_IMPL["impl"] == "all_to_all"
+               and x.shape[1] % ms == 0 and x.shape[1] >= ms)
+
+    bspec = P(tuple(batch_axes) if batch_axes else None, None, None)
+    b_sp = P(tuple(batch_axes) if batch_axes else None, model_axis, None)
+    espec = P(model_axis, None, None)
+    args = [x, p["router"], p["up"], p["down"]]
+    in_specs = [b_sp if use_a2a else bspec, P(None, None), espec, espec]
+    if "gate" in p:
+        args.append(p["gate"])
+        in_specs.append(espec)
+
+    all_axes = tuple(batch_axes) + (model_axis,)
+    if use_a2a:
+        def shard_fn(x_, router, up, down, *maybe_gate):
+            pp = {"router": router, "up": up, "down": down}
+            if maybe_gate:
+                pp["gate"] = maybe_gate[0]
+            y, aux = _moe_a2a(x_, pp, cfg, cfg.act, model_axis, ms)
+            return y, jax.lax.pmean(aux, all_axes)
+        out_specs = (b_sp, P())
+    else:
+        def shard_fn(x_, router, up, down, *maybe_gate):
+            rank = jax.lax.axis_index(model_axis)
+            pp = {"router": router, "up": up, "down": down}
+            if maybe_gate:
+                pp["gate"] = maybe_gate[0]
+            y, aux = _moe_local(x_, pp, cfg, cfg.act, rank * e_local,
+                                e_local, model_axis)
+            return y, jax.lax.pmean(aux, all_axes)
+        out_specs = (bspec, P())
+
+    y, aux = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=out_specs, check_vma=False)(*args)
+    return y, aux

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Structure (one "recurrent block"):
+
+    x ─ linear ─ GeLU ───────────────┐
+    x ─ linear ─ conv1d(4) ─ RG-LRU ─┴─ (*) ─ linear ─ out
+
+RG-LRU per channel:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t), r/i = sigmoid gates.
+
+The recurrence is *element-wise* (no GEMM): SISA is inapplicable to it
+(DESIGN.md §4); the surrounding projections still route through
+``sisa_matmul``.  Training uses ``lax.associative_scan`` (log-depth,
+TPU-friendly) rather than a sequential scan.
+
+Simplifications vs the HF checkpoint (documented per DESIGN.md): diagonal
+r/i gates (Griffin uses block-diagonal linear gates) and ``d_rnn ==
+d_model``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Array, IDENTITY_SHARDER, Sharder,
+                                 dense_init, linear_apply, linear_init)
+
+_C = 8.0      # Griffin's recurrence sharpness constant
+_CONV_W = 4   # temporal conv width
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "in_gate": linear_init(ks[0], d, d, dtype, cfg.use_bias),
+        "in_rec": linear_init(ks[1], d, d, dtype, cfg.use_bias),
+        "conv_w": (jax.random.normal(ks[2], (_CONV_W, d), jnp.float32)
+                   * 0.1).astype(dtype),
+        "gate_r": jnp.zeros((d,), jnp.float32),
+        "gate_i": jnp.zeros((d,), jnp.float32),
+        # softplus(lambda) init ~ uniform in a stable decay range
+        "lam": jax.random.uniform(ks[3], (d,), jnp.float32, 0.3, 0.8),
+        "out": linear_init(ks[4], d, d, dtype, cfg.use_bias),
+    }
+
+
+def _gates(p, x32: Array) -> Tuple[Array, Array]:
+    """log(a_t) and the input branch b_t = sqrt(1-a^2) * i * x."""
+    r = jax.nn.sigmoid(x32 * p["gate_r"])
+    i = jax.nn.sigmoid(x32 * p["gate_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # < 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+    return a, b
+
+
+def _conv1d(p, x: Array) -> Array:
+    """Depthwise causal temporal conv, width 4. x: (B, S, d)."""
+    pads = [x]
+    for w in range(1, _CONV_W):
+        pads.append(jnp.pad(x, ((0, 0), (w, 0), (0, 0)))[:, :x.shape[1]])
+    out = sum(pads[w] * p["conv_w"][w] for w in range(_CONV_W))
+    return out
+
+
+def rglru_apply(p, x: Array, cfg,
+                sharder: Sharder = IDENTITY_SHARDER) -> Array:
+    """Full-sequence forward. x: (B, S, d)."""
+    gate = jax.nn.gelu(linear_apply(p["in_gate"], x))
+    u = linear_apply(p["in_rec"], x)
+    u = _conv1d(p, u)
+    a, b = _gates(p, u.astype(jnp.float32))
+    # h_t = a_t h_{t-1} + b_t  via associative scan over S.
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = sharder.constrain(h.astype(x.dtype), "rnn_state_seq")
+    return linear_apply(p["out"], gate * h)
+
+
+# ---------------------------- decode path ---------------------------------
+def rglru_init_cache(batch: int, d: int, dtype) -> Dict[str, Array]:
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, d), dtype)}
+
+
+def rglru_prefill_cache(p, x: Array, cfg) -> Dict[str, Array]:
+    """Run the recurrence over the prompt, keep final state."""
+    u = _conv1d(p, linear_apply(p["in_rec"], x))
+    a, b = _gates(p, u.astype(jnp.float32))
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    u_raw = linear_apply(p["in_rec"], x)
+    return {"h": h[:, -1].astype(jnp.float32),
+            "conv": u_raw[:, -(_CONV_W - 1):]}
+
+
+def rglru_decode_step(p, x: Array, cache: Dict[str, Array], cfg,
+                      ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, 1, d) -> (out (B,1,d), new cache)."""
+    gate = jax.nn.gelu(linear_apply(p["in_gate"], x))
+    u_t = linear_apply(p["in_rec"], x)[:, 0]             # (B, d)
+    hist = jnp.concatenate([cache["conv"], u_t[:, None]], axis=1)
+    u_conv = sum(hist[:, -(w + 1)] * p["conv_w"][w] for w in range(_CONV_W))
+    a, b = _gates(p, u_conv.astype(jnp.float32))
+    h = a * cache["h"] + b
+    out = linear_apply(p["out"], gate[:, 0] * h.astype(x.dtype))
+    return out[:, None], {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,173 @@
+"""RWKV6 "Finch" time-mix (arXiv:2404.05892) — data-dependent decay WKV.
+
+Per head (key dim dk, value dim dv), with data-dependent per-channel decay
+``w_t``:
+
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Training/prefill uses the **chunkwise-parallel form** (TPU-friendly: the
+intra-chunk part is an attention-like (T_c x T_c) masked matmul on the
+MXU, the inter-chunk part a scan over S/T_c chunk states), avoiding the
+O(S) sequential scan *and* the O(S x dk x dv) backward-pass state
+materialization.  Decode is the O(1) recurrence.
+
+The recurrence itself is attention-free and element-wise-decayed — no
+GEMM for SISA to scale in (DESIGN.md §4); the r/k/v/w/o projections do
+route through ``sisa_matmul``.  Simplifications vs the HF checkpoint:
+static token-shift interpolation, full-rank (not LoRA) decay projection,
+and per-step log-decay bounded to ``[-1.4, 0)`` so the chunkwise
+``exp(+-cumsum)`` factorization stays within f32 range (max exponent
+CHUNK x 1.4 = 44.8 < log(f32max) ~ 88).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Array, IDENTITY_SHARDER, Sharder,
+                                 linear_apply, linear_init)
+
+CHUNK = 32
+_MAX_DECAY = 1.4      # |log w| bound, see module docstring
+
+
+def _decay_log(decay_logit: Array) -> Array:
+    """Bounded log-decay: wlog in [-(1e-4 + 1.4), -1e-4)."""
+    return -(1e-4 + _MAX_DECAY * jax.nn.sigmoid(decay_logit))
+
+
+def rwkv_head_dims(cfg) -> Tuple[int, int]:
+    hd = cfg.resolved_head_dim if cfg.n_heads else 64
+    n_heads = cfg.d_model // hd
+    return n_heads, hd
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    h, hd = rwkv_head_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "mu": jnp.full((4, d), 0.5, jnp.float32),         # token-shift mixes
+        "r": linear_init(ks[0], d, h * hd, dtype, False),
+        "k": linear_init(ks[1], d, h * hd, dtype, False),
+        "v": linear_init(ks[2], d, h * hd, dtype, False),
+        "w": linear_init(ks[3], d, h * hd, dtype, False),  # decay projection
+        "u": (jax.random.normal(ks[4], (h, hd), jnp.float32) * 0.1),
+        "o": linear_init(ks[5], h * hd, d, dtype, False),
+    }
+
+
+def _shifted(x: Array, x_prev: Array) -> Array:
+    """x_{t-1} sequence (first position uses x_prev). x: (B,S,d)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _projections(p, x: Array, x_prev: Array, h: int, hd: int):
+    b, s, d = x.shape
+    sx = _shifted(x, x_prev)
+    mu = p["mu"]
+    def mix(i):
+        return x * mu[i] + sx * (1.0 - mu[i])
+    r = linear_apply(p["r"], mix(0)).reshape(b, s, h, hd)
+    k = linear_apply(p["k"], mix(1)).reshape(b, s, h, hd)
+    v = linear_apply(p["v"], mix(2)).reshape(b, s, h, hd)
+    wlog = _decay_log(
+        linear_apply(p["w"], mix(3)).astype(jnp.float32)
+    ).reshape(b, s, h, hd)                               # log w_t < 0
+    return r, k, v, wlog
+
+
+def _chunk_scan(r, k, v, wlog, u, s0):
+    """Chunkwise-parallel WKV.  r/k/v: (B, S, H, hd) with S % CHUNK == 0,
+    wlog: f32 log-decay, s0: (B, H, hd, hd) initial state."""
+    b, s, h, hd = r.shape
+    nc = s // CHUNK
+    rc = r.reshape(b, nc, CHUNK, h, hd)
+    kc = k.reshape(b, nc, CHUNK, h, hd)
+    vc = v.reshape(b, nc, CHUNK, h, hd)
+    wc = wlog.reshape(b, nc, CHUNK, h, hd)
+
+    def body(state, inp):
+        rr, kk, vv, ww = inp                              # (B, T, H, hd)
+        cs = jnp.cumsum(ww, axis=1)                       # cs_i = sum_{l<=i}
+        cs_prev = cs - ww                                 # cs_{i-1}
+        # intra-chunk attention-like term
+        ri = rr.astype(jnp.float32) * jnp.exp(cs_prev)
+        kj = kk.astype(jnp.float32) * jnp.exp(-cs)
+        att = jnp.einsum("bihd,bjhd->bhij", ri, kj)       # j < i part
+        ii = jnp.arange(CHUNK)
+        causal = (ii[:, None] > ii[None, :])[None, None]
+        att = jnp.where(causal, att, 0.0)
+        diag = jnp.einsum("bihd,bihd->bhi",
+                          rr.astype(jnp.float32) * u, kk.astype(jnp.float32))
+        out = jnp.einsum("bhij,bjhd->bihd", att, vv.astype(jnp.float32))
+        out += diag[..., None].transpose(0, 2, 1, 3) * vv.astype(jnp.float32)
+        # inter-chunk: contribution of the carried state
+        out += jnp.einsum("bihk,bhkd->bihd", ri, state)
+        # state update: S_end = diag(e_T) S + sum_j diag(e_T/e_j) k_j v_j^T
+        e_total = jnp.exp(cs[:, -1])                      # (B, H, hd)
+        kdec = kk.astype(jnp.float32) * jnp.exp(cs[:, -1][:, None] - cs)
+        new_state = state * e_total[..., None] + \
+            jnp.einsum("bjhk,bjhd->bhkd", kdec, vv.astype(jnp.float32))
+        return new_state, out
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, wc))
+    s_final, outs = jax.lax.scan(body, s0, inputs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out, s_final
+
+
+def rwkv_apply(p, x: Array, cfg, x_prev: Array = None,
+               state0: Array = None,
+               sharder: Sharder = IDENTITY_SHARDER,
+               return_state: bool = False):
+    """Full-sequence time-mix. x: (B, S, d)."""
+    b, s, d = x.shape
+    h, hd = rwkv_head_dims(cfg)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    pad = (-s) % CHUNK
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    r, k, v, wlog = _projections(p, xp, x_prev, h, hd)
+    if pad:
+        # Padded positions must not touch the carried state: zero their
+        # k (no kv outer product) and set decay to 1 (wlog = 0).
+        valid = (jnp.arange(s + pad) < s)[None, :, None, None]
+        k = jnp.where(valid, k, 0)
+        wlog = jnp.where(valid, wlog, 0.0)
+    out, s_final = _chunk_scan(r, k, v, wlog, p["u"], state0)
+    out = out[:, :s]
+    out = sharder.constrain(out.astype(x.dtype), "attn_q")
+    y = linear_apply(p["o"], out.reshape(b, s, h * hd))
+    if return_state:
+        return y, {"state": s_final, "shift": x[:, -1]}
+    return y
+
+
+# ---------------------------- decode path ---------------------------------
+def rwkv_init_cache(batch: int, cfg, dtype) -> Dict[str, Array]:
+    h, hd = rwkv_head_dims(cfg)
+    return {"state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "shift": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def rwkv_decode_step(p, x: Array, cache: Dict[str, Array], cfg
+                     ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, 1, d)."""
+    b, _, d = x.shape
+    h, hd = rwkv_head_dims(cfg)
+    r, k, v, wlog = _projections(p, x, cache["shift"], h, hd)
+    r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    w1 = jnp.exp(wlog[:, 0])                              # (B, H, hd)
+    kv = jnp.einsum("bhk,bhd->bhkd", k1, v1)
+    out = jnp.einsum("bhk,bhkd->bhd", r1,
+                     cache["state"] + p["u"][..., None] * kv)
+    new_state = cache["state"] * w1[..., None] + kv
+    y = linear_apply(p["o"], out.astype(x.dtype).reshape(b, 1, h * hd))
+    return y, {"state": new_state, "shift": x[:, 0]}

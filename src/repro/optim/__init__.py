@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, apply_updates,
+                               clip_by_global_norm, cosine_lr, global_norm,
+                               init_state)
+
+__all__ = ["AdamWConfig", "AdamWState", "apply_updates",
+           "clip_by_global_norm", "cosine_lr", "global_norm", "init_state"]

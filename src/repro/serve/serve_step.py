@@ -1,0 +1,77 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token).
+
+``decode_32k`` / ``long_500k`` cells lower exactly these functions.  For
+archs whose KV-head count does not divide the model axis (gemma3, whisper,
+recurrentgemma) the cache is *sequence*-sharded and the decode softmax is
+distributed (GSPMD emits the max/sum all-reduces) — the TPU analogue of
+giving every slab a slice of the cache (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshSharder, mesh_axes_for
+from repro.models import forward_decode, forward_prefill
+from repro.models.common import IDENTITY_SHARDER
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, *,
+                      cache_len: Optional[int] = None):
+    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
+    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+
+    def prefill_step(params, batch: Dict[str, jax.Array]):
+        return forward_prefill(params, cfg, batch, cache_len=cache_len,
+                               sharder=sharder, mesh=mesh,
+                               batch_axes=batch_axes)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
+    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+
+    def decode_step(params, caches, tokens: jax.Array, pos: jax.Array):
+        return forward_decode(params, cfg, tokens, caches, pos,
+                              sharder=sharder, mesh=mesh,
+                              batch_axes=batch_axes)
+
+    return decode_step
+
+
+def cache_specs(cache_shapes: PyTree, cfg: ModelConfig, mesh) -> PyTree:
+    """PartitionSpecs for a cache pytree (stacked leading layer dim).
+
+    KV caches: heads over ``model`` when divisible, else sequence over
+    ``model``.  Recurrent states: feature dim over ``model``.  Batch over
+    the batch axes when divisible.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import _fit, mesh_axes_for
+
+    ax = mesh_axes_for(mesh)
+    head_ok = cfg.n_kv_heads % mesh.shape[ax.model] == 0
+
+    def spec_for(leaf):
+        shape = tuple(leaf.shape)
+        # leading dim = stacked layers (scan); second = batch
+        batch = _fit(mesh, shape[1], ax.batch)
+        if len(shape) == 5:            # (L, B, cap, Hkv, hd) KV cache
+            if head_ok:
+                return P(None, batch, None,
+                         _fit(mesh, shape[3], ax.model), None)
+            return P(None, batch, _fit(mesh, shape[2], ax.model), None, None)
+        if len(shape) == 4:            # (L, B, H, ...) rwkv shift? / conv
+            return P(None, batch, None, None)
+        if len(shape) == 3:            # (L, B, d) states
+            return P(None, batch, _fit(mesh, shape[2], ax.model))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(spec_for, cache_shapes)

@@ -1,0 +1,100 @@
+"""Distributed train step: grad-accumulation microbatching + AdamW.
+
+The returned ``train_step(params, opt_state, batch)`` is pure and
+jit/lower-able with sharded ShapeDtypeStructs — the dry-run lowers exactly
+this function.  Gradient synchronization is implicit: params are sharded
+FSDPxTP, so GSPMD emits the all-gather (params) / reduce-scatter (grads)
+pairs; the pod axis composes hierarchically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshSharder, mesh_axes_for
+from repro.models import forward_train
+from repro.models.common import IDENTITY_SHARDER
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], accum: int):
+    def rs(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(cfg: ModelConfig, mesh=None, *,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    accum_steps: int = 1, remat: str = "full",
+                    grad_compression: Optional[str] = None,
+                    shard_grads: bool = False):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
+    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+
+    def loss_fn(params, mb):
+        loss, metrics = forward_train(params, cfg, mb, sharder=sharder,
+                                      mesh=mesh, batch_axes=batch_axes,
+                                      remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain_like_params(tree, params):
+        """Pin gradient accumulators to the FSDPxTP param sharding so the
+        cross-replica reduction is a reduce-scatter, not a full
+        all-reduce of replicated f32 grads (EXPERIMENTS.md §Perf #B)."""
+        if not (shard_grads and mesh is not None):
+            return tree
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import param_specs
+        specs = param_specs(params, cfg, mesh)
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, s)), tree, specs)
+
+    def train_step(params, opt_state: adamw.AdamWState,
+                   batch: Dict[str, jax.Array]
+                   ) -> Tuple[PyTree, adamw.AdamWState, Dict[str, jax.Array]]:
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = _constrain_like_params(grads, params)
+        else:
+            mbs = _split_microbatches(batch, accum_steps)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                g_acc = _constrain_like_params(g_acc, params)
+                return (g_acc, l_acc + loss), None
+
+            g0 = _constrain_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+        if grad_compression == "bf16":
+            # Compressed cross-replica reduction: cast the (already
+            # reduce-scattered) grads to bf16 and back — the error-feedback
+            # variant lives in repro.distributed.compression.
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,96 @@
+"""Fault-tolerant training loop.
+
+Checkpoint/restart: resumes from the latest manifest (data order is a
+pure function of step, so no pipeline state is saved).  Straggler
+watchdog: per-step wall-clock EWMA; flagged steps are logged and counted
+(in deployment the health controller uses them to trigger the elastic
+re-mesh path, exercised in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.fault import StragglerWatchdog
+from repro.models import init_params
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    accum_steps: int = 1
+    remat: str = "none"
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, *,
+                 mesh=None, opt_cfg: Optional[adamw.AdamWConfig] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        self.watchdog = StragglerWatchdog()
+        self.data = SyntheticLM(cfg, tcfg.global_batch, tcfg.seq_len,
+                                DataConfig(seed=tcfg.seed))
+        self.step_fn = jax.jit(make_train_step(
+            cfg, mesh, opt_cfg=self.opt_cfg,
+            accum_steps=tcfg.accum_steps, remat=tcfg.remat))
+        self.history: list = []
+
+    def init_or_restore(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = adamw.init_state(params)
+        start = 0
+        if self.tcfg.ckpt_dir:
+            latest = ckpt.latest_step_dir(self.tcfg.ckpt_dir)
+            if latest:
+                start, (params, opt_state) = ckpt.restore(
+                    latest, (params, opt_state))
+                print(f"[trainer] restored step {start} from {latest}")
+        return start, params, opt_state
+
+    def run(self) -> Dict[str, Any]:
+        start, params, opt_state = self.init_or_restore()
+        n_stragglers = 0
+        for step in range(start, self.tcfg.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if self.watchdog.observe(step, dt):
+                n_stragglers += 1
+            self.history.append({"step": step, "loss": loss, "dt": dt})
+            if step % self.tcfg.log_every == 0:
+                print(f"[trainer] step {step:5d} loss {loss:.4f} "
+                      f"{dt*1e3:.0f}ms", flush=True)
+            if (self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0):
+                ckpt.save_step(self.tcfg.ckpt_dir, step + 1,
+                               (params, opt_state),
+                               extra={"arch": self.cfg.name})
+        return {"params": params, "opt_state": opt_state,
+                "final_loss": self.history[-1]["loss"] if self.history
+                else None,
+                "first_loss": self.history[0]["loss"] if self.history
+                else None,
+                "stragglers": n_stragglers,
+                "history": self.history}

@@ -1,0 +1,108 @@
+"""Unit + property tests for the SISA §3.2 scheduler."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ExecMode, SISA_128, MONOLITHIC_128, SlabArrayConfig,
+                        plan_gemm)
+
+
+class TestModeSelection:
+    def test_small_m_independent(self):
+        plan = plan_gemm(12, 896, 896, SISA_128)
+        assert len(plan.phases) == 1
+        p = plan.phases[0]
+        assert p.mode == ExecMode.INDEPENDENT
+        assert p.fusion == 1 and p.group_h == 16 and p.n_groups == 8
+
+    def test_m16_boundary_stays_independent(self):
+        p = plan_gemm(16, 512, 512, SISA_128).phases[0]
+        assert p.mode == ExecMode.INDEPENDENT
+
+    def test_m17_fuses_to_32(self):
+        p = plan_gemm(17, 512, 512, SISA_128).phases[0]
+        assert p.mode == ExecMode.FUSED
+        assert p.group_h == 32 and p.n_groups == 4
+
+    def test_m33_fuses_to_64(self):
+        # Paper §4.4 case study: m=33 -> 2 x (64x128)
+        p = plan_gemm(33, 896, 896, SISA_128).phases[0]
+        assert p.group_h == 64 and p.n_groups == 2
+
+    def test_m65_monolithic(self):
+        p = plan_gemm(65, 512, 512, SISA_128).phases[0]
+        assert p.mode == ExecMode.MONOLITHIC
+        assert p.group_h == 128 and p.n_groups == 1
+
+    def test_m150_main_plus_residual(self):
+        plan = plan_gemm(150, 4864, 896, SISA_128)
+        assert len(plan.phases) == 2
+        main, resid = plan.phases
+        assert main.mode == ExecMode.MONOLITHIC and main.group_h == 128
+        assert resid.group_h == 32  # 22 rows -> fused pair of slabs
+        assert all(t.tm == 128 for g in main.group_tiles for t in g)
+        assert all(t.tm == 22 for g in resid.group_tiles for t in g)
+
+    def test_monolithic_baseline_never_partitions(self):
+        for m in (1, 12, 100, 300):
+            plan = plan_gemm(m, 896, 896, MONOLITHIC_128)
+            for p in plan.phases:
+                assert p.n_groups == 1 and p.group_h == 128
+
+    def test_power_gating_small_tile_count(self):
+        # 1 N-tile across 8 slabs -> 7 gated (Fig 3d)
+        p = plan_gemm(8, 128, 256, SISA_128).phases[0]
+        assert p.active_slabs == 1
+
+    def test_partial_m_gating_in_monolithic(self):
+        # m=100 -> ceil(100/16)=7 slabs needed, 1 gated (paper: up to
+        # 18% EDP reduction regime)
+        p = plan_gemm(100, 512, 512, SISA_128).phases[0]
+        assert p.mode == ExecMode.MONOLITHIC
+        assert p.active_slabs == 7
+
+    def test_invalid_dims_raise(self):
+        with pytest.raises(ValueError):
+            plan_gemm(0, 128, 128, SISA_128)
+        with pytest.raises(ValueError):
+            plan_gemm(128, -1, 128, SISA_128)
+
+
+@settings(max_examples=200, deadline=None)
+@given(m=st.integers(1, 1024), n=st.integers(1, 8192), k=st.integers(1, 8192))
+def test_plan_covers_all_macs(m, n, k):
+    """Property: every output element is produced exactly once."""
+    plan = plan_gemm(m, n, k, SISA_128)
+    covered = sum(t.tm * t.tn for ph in plan.phases
+                  for g in ph.group_tiles for t in g)
+    assert covered == m * n
+    assert all(t.k == k for ph in plan.phases
+               for g in ph.group_tiles for t in g)
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(1, 1024), n=st.integers(1, 4096), k=st.integers(1, 4096),
+       n_slabs=st.sampled_from([1, 2, 4, 8, 16]))
+def test_plan_valid_for_any_slab_count(m, n, k, n_slabs):
+    cfg = SlabArrayConfig(array_h=128, array_w=128, n_slabs=n_slabs,
+                          power_gating=n_slabs > 1)
+    plan = plan_gemm(m, n, k, cfg)
+    for ph in plan.phases:
+        assert ph.group_h <= 128
+        assert ph.n_groups * ph.fusion == n_slabs
+        assert 0 < ph.active_slabs <= n_slabs
+        for g in ph.group_tiles:
+            for t in g:
+                assert t.tm <= ph.group_h and t.tn <= cfg.array_w
+
+
+def test_fusion_factor_powers_of_two():
+    assert SISA_128.fusion_factor(1) == 1
+    assert SISA_128.fusion_factor(16) == 1
+    assert SISA_128.fusion_factor(17) == 2
+    assert SISA_128.fusion_factor(32) == 2
+    assert SISA_128.fusion_factor(33) == 4
+    assert SISA_128.fusion_factor(64) == 4
+    assert SISA_128.fusion_factor(65) == 8
+    assert SISA_128.fusion_factor(128) == 8

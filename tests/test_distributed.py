@@ -1,0 +1,275 @@
+"""Sharding-rule unit tests (no multi-device runtime needed: the rules
+are pure functions of shapes + mesh axis sizes) + subprocess dry-run
+smoke (which brings up the real 512-device host mesh)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, smoke_config
+from repro.distributed.sharding import (MeshAxes, _fit, _spec, param_specs,
+                                        mesh_axes_for)
+from repro.launch import inputs as inp
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    """Duck-typed mesh: sharding rules only read .shape and .axis_names."""
+    shape: dict
+    axis_names: tuple
+
+
+MESH_1POD = FakeMesh({"data": 16, "model": 16}, ("data", "model"))
+MESH_2POD = FakeMesh({"pod": 2, "data": 16, "model": 16},
+                     ("pod", "data", "model"))
+
+
+class TestFit:
+    def test_divisible(self):
+        assert _fit(MESH_1POD, 4096, "model") == "model"
+
+    def test_indivisible_replicates(self):
+        assert _fit(MESH_1POD, 40, "model") is None
+
+    def test_tuple_axes_degrade(self):
+        # 16 divides by data(16) but not pod*data(32): drop the pod axis.
+        assert _fit(MESH_2POD, 16, ("pod", "data")) == "data"
+        assert _fit(MESH_2POD, 32, ("pod", "data")) == ("pod", "data")
+
+    def test_spec_builder(self):
+        s = _spec(MESH_1POD, (4096, 11008), ("data",), "model")
+        assert s == P("data", "model")
+
+
+class TestParamSpecs:
+    def _specs(self, arch, mesh):
+        cfg = get_config(arch)
+        shapes = inp.params_structs(cfg)
+        return cfg, shapes, param_specs(shapes, cfg, mesh)
+
+    def test_yi_attention_head_sharded(self):
+        cfg, shapes, specs = self._specs("yi-6b", MESH_1POD)
+        # 32 q-heads % 16 == 0 -> q column-parallel over model
+        q = specs["groups"][0]["b0"]["mixer"]["q"]["w"]
+        assert q == P(None, "data", "model")
+        o = specs["groups"][0]["b0"]["mixer"]["o"]["w"]
+        assert o == P(None, "model", "data")
+
+    def test_gemma3_heads_replicated_over_model(self):
+        # 4 heads % 16 != 0 -> replicate head dim, keep FSDP
+        cfg, shapes, specs = self._specs("gemma3-1b", MESH_1POD)
+        q = specs["groups"][0]["b0"]["mixer"]["q"]["w"]
+        assert q == P(None, "data", None)
+
+    def test_mlp_col_row(self):
+        cfg, shapes, specs = self._specs("yi-6b", MESH_1POD)
+        blk = specs["groups"][0]["b0"]
+        assert blk["mlp"]["up"]["w"] == P(None, "data", "model")
+        assert blk["mlp"]["down"]["w"] == P(None, "model", "data")
+
+    def test_moe_expert_parallel(self):
+        cfg, shapes, specs = self._specs("dbrx-132b", MESH_1POD)
+        blk = specs["groups"][0]["b0"]
+        # (E, d, ff): E over model, d over data
+        assert blk["moe"]["up"] == P(None, "model", "data", None)
+        assert blk["moe"]["router"] in (P(), P(None))  # replicated
+
+    def test_embed_vocab_sharded(self):
+        cfg, shapes, specs = self._specs("command-r-plus-104b", MESH_1POD)
+        assert specs["embed"]["table"] == P("model", "data")
+
+    def test_multipod_fsdp_uses_both_axes(self):
+        cfg, shapes, specs = self._specs("command-r-plus-104b", MESH_2POD)
+        q = specs["groups"][0]["b0"]["mixer"]["q"]["w"]
+        # d=12288 divides 32 -> FSDP over (pod, data)
+        assert q == P(None, ("pod", "data"), "model")
+
+    def test_norms_replicated(self):
+        cfg, shapes, specs = self._specs("yi-6b", MESH_1POD)
+        assert specs["final_norm"]["scale"] == P()
+
+    def test_every_leaf_has_spec(self):
+        for arch in ("gemma3-1b", "dbrx-132b", "whisper-base", "rwkv6-3b"):
+            cfg, shapes, specs = self._specs(arch, MESH_2POD)
+            ls, lp = jax.tree.leaves(shapes), jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            assert len(ls) == len(lp)
+            for struct, spec in zip(ls, lp):
+                assert len(spec) <= len(struct.shape)
+                # every sharded dim must divide
+                for dim, axes in zip(struct.shape, spec):
+                    if axes is None:
+                        continue
+                    size = 1
+                    for a in (axes if isinstance(axes, tuple) else (axes,)):
+                        size *= MESH_2POD.shape[a]
+                    assert dim % size == 0, (arch, struct.shape, spec)
+
+
+class TestFault:
+    def test_watchdog_flags_outlier(self):
+        from repro.distributed.fault import StragglerWatchdog
+        wd = StragglerWatchdog(threshold=2.0)
+        flags = [wd.observe(i, 1.0) for i in range(10)]
+        assert not any(flags)
+        assert wd.observe(10, 5.0) is True
+        assert wd.observe(11, 1.0) is False   # EWMA not poisoned
+
+    def test_elastic_plan(self):
+        from repro.distributed.fault import plan_elastic_mesh
+        assert plan_elastic_mesh(256, model_parallel=16) == (16, 16)
+        assert plan_elastic_mesh(255, model_parallel=16) == (15, 16)
+        assert plan_elastic_mesh(15, model_parallel=16) is None
+
+
+class TestCompression:
+    def test_error_feedback_reduces_bias(self):
+        from repro.distributed.compression import compress_grads
+        import numpy as np
+        g = {"w": jnp.asarray(
+            np.random.default_rng(0).normal(size=(256,)) * 1e-3,
+            jnp.float32)}
+        # repeated identical grads: EF accumulates the quantization error
+        err = None
+        total_c = jnp.zeros_like(g["w"])
+        for _ in range(64):
+            c, err = compress_grads(g, err, "int8")
+            total_c = total_c + c["w"]
+        bias = jnp.abs(total_c / 64 - g["w"]).mean()
+        c1, _ = compress_grads(g, None, "int8")
+        bias_one = jnp.abs(c1["w"] - g["w"]).mean()
+        assert float(bias) < float(bias_one) * 0.5
+
+
+@pytest.mark.slow
+def test_moe_ep_impls_agree_subprocess():
+    """psum-EP and all_to_all-EP must produce identical outputs
+    (8 fake devices, mesh data=2 x model=4, 8 experts)."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.sharding import Mesh
+from repro.configs import smoke_config
+from repro.configs.base import MoEConfig
+from repro.models import moe as M
+
+cfg = dataclasses.replace(smoke_config("dbrx-132b"),
+                          moe=MoEConfig(n_experts=8, top_k=2,
+                                        capacity_factor=4.0))
+mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+key = jax.random.PRNGKey(0)
+p = M.moe_init(key, cfg, jnp.float32)
+x = jax.random.normal(key, (4, 16, cfg.d_model), jnp.float32)
+
+def run(impl):
+    M.set_ep_impl(impl)
+    with mesh:
+        y, aux = jax.jit(lambda p, x: M.moe_apply(
+            p, x, cfg, mesh=mesh, batch_axes=("data",)))(p, x)
+    return np.asarray(y)
+
+y_local, _ = M.moe_apply(p, x, cfg, mesh=None)
+y_psum = run("psum")
+y_a2a = run("all_to_all")
+np.testing.assert_allclose(y_psum, np.asarray(y_local), atol=2e-5)
+np.testing.assert_allclose(y_a2a, np.asarray(y_local), atol=2e-5)
+print("MOE_EP_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "MOE_EP_OK" in out.stdout, out.stdout + out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_elastic_restart_subprocess():
+    """Node-failure recovery loop: train 3 steps on an 8-device (4 data x
+    2 model) mesh, checkpoint, 'lose' 4 devices, restore RESHARDED onto
+    the surviving (2 data x 2 model) mesh, take one more step."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np, os
+from jax.sharding import Mesh, NamedSharding
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+from repro.checkpoint import ckpt
+from repro.distributed.sharding import param_specs, to_named
+from repro.distributed.fault import plan_elastic_mesh, simulate_failure
+from repro.data import SyntheticLM
+
+cfg = smoke_config("yi-6b")
+devs = jax.devices()
+
+def build(devices, shape):
+    return Mesh(np.asarray(devices[:shape[0]*shape[1]]).reshape(shape),
+                ("data", "model"))
+
+mesh = build(devs, (4, 2))
+params = init_params(cfg, jax.random.PRNGKey(0))
+opt = adamw.init_state(params)
+specs = param_specs(params, cfg, mesh)
+params = jax.tree.map(jax.device_put, params, to_named(specs, mesh))
+data = SyntheticLM(cfg, 8, 32)
+step_fn = jax.jit(make_train_step(cfg, mesh, remat="none"))
+with mesh:
+    for s in range(3):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        params, opt, m = step_fn(params, opt, batch)
+loss_before = float(m["loss"])
+ckpt.save("/tmp/elastic_ckpt/step_3", 3, (params, opt))
+
+# --- failure: 4 devices die; plan + rebuild + restore resharded ---
+healthy = simulate_failure(devs, 4)
+plan = plan_elastic_mesh(len(healthy), model_parallel=2)
+assert plan == (2, 2), plan
+mesh2 = build(healthy, plan)
+like = (jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt))
+specs2 = (param_specs(like[0], cfg, mesh2),
+          adamw.AdamWState(step=None, mu=param_specs(like[0], cfg, mesh2),
+                           nu=param_specs(like[0], cfg, mesh2)))
+from jax.sharding import PartitionSpec as P
+specs2 = (specs2[0], adamw.AdamWState(step=P(), mu=specs2[1].mu,
+                                      nu=specs2[1].nu))
+step0, (params2, opt2) = ckpt.restore("/tmp/elastic_ckpt/step_3",
+                                      (params, opt), mesh=mesh2,
+                                      specs=specs2)
+assert step0 == 3
+step_fn2 = jax.jit(make_train_step(cfg, mesh2, remat="none"))
+with mesh2:
+    batch = {k: jnp.asarray(v) for k, v in data.batch(3).items()}
+    params2, opt2, m2 = step_fn2(params2, opt2, batch)
+assert np.isfinite(float(m2["loss"]))
+print("ELASTIC_OK", loss_before, float(m2["loss"]))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "ELASTIC_OK" in out.stdout, out.stdout + out.stderr[-2500:]
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_multipod_subprocess():
+    """End-to-end: reduced config, real 512-device host mesh, multi-pod."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", "gemma3-1b", "--shape", "train_4k", "--mesh",
+         "multi_pod", "--out", "/tmp/dryrun_smoke"],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "0 errors" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]

@@ -1,0 +1,153 @@
+"""Substrate integration: data determinism, optimizer, checkpoint/restart,
+trainer convergence, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.optim import adamw
+from repro.checkpoint import ckpt
+
+
+class TestData:
+    def test_deterministic_per_step(self):
+        cfg = smoke_config("yi-6b")
+        d1 = SyntheticLM(cfg, 4, 32)
+        d2 = SyntheticLM(cfg, 4, 32)
+        np.testing.assert_array_equal(d1.batch(7)["tokens"],
+                                      d2.batch(7)["tokens"])
+        assert not np.array_equal(d1.batch(7)["tokens"],
+                                  d1.batch(8)["tokens"])
+
+    def test_host_sharding_disjoint(self):
+        cfg = smoke_config("yi-6b")
+        a = SyntheticLM(cfg, 8, 16, host_index=0, host_count=2)
+        b = SyntheticLM(cfg, 8, 16, host_index=1, host_count=2)
+        assert a.batch(0)["tokens"].shape == (4, 16)
+        assert not np.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+
+    def test_tokens_in_vocab(self):
+        cfg = smoke_config("gemma3-1b")
+        t = SyntheticLM(cfg, 4, 64).batch(0)["tokens"]
+        assert t.min() >= 0 and t.max() < cfg.vocab_size
+
+
+class TestOptimizer:
+    def test_adamw_descends_quadratic(self):
+        params = {"w": jnp.asarray([2.0, -3.0])}
+        state = adamw.init_state(params)
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                                total_steps=1000)
+        for _ in range(200):
+            grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adamw.apply_updates(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.2
+
+    def test_clip_norm(self):
+        g = {"w": jnp.full((4,), 100.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, 1e-3)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_frac=0.1)
+        assert float(adamw.cosine_lr(cfg, jnp.int32(5))) == pytest.approx(0.5)
+        assert float(adamw.cosine_lr(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(adamw.cosine_lr(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cfg = smoke_config("yi-6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        state = adamw.init_state(params)
+        ckpt.save(str(tmp_path / "step_5"), 5, (params, state))
+        step, (p2, s2) = ckpt.restore(str(tmp_path / "step_5"),
+                                      (params, state))
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_and_gc(self, tmp_path):
+        cfg = smoke_config("whisper-base")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        for s in (10, 20, 30, 40):
+            ckpt.save_step(str(tmp_path), s, params, keep=2)
+        assert ckpt.latest_step_dir(str(tmp_path)).endswith("step_40")
+        remaining = sorted(os.listdir(tmp_path))
+        assert remaining == ["step_30", "step_40"]
+
+    def test_elastic_restore_respecs(self, tmp_path):
+        """Restore under a different sharding-spec tree (new mesh plan)."""
+        from repro.distributed.sharding import param_specs
+        cfg = smoke_config("yi-6b")
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        ckpt.save(str(tmp_path / "step_1"), 1, params)
+        # restore with explicit (degenerate) mesh + specs: exercises the
+        # device_put/reshard path end-to-end on CPU
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        specs = param_specs(params, cfg, mesh)
+        step, p2 = ckpt.restore(str(tmp_path / "step_1"), params,
+                                mesh=mesh, specs=specs)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestTrainer:
+    def _run(self, tmp_path, steps, arch="yi-6b"):
+        from repro.train import Trainer, TrainerConfig
+        cfg = smoke_config(arch)
+        tcfg = TrainerConfig(steps=steps, global_batch=4, seq_len=32,
+                             ckpt_every=5, ckpt_dir=str(tmp_path),
+                             log_every=100)
+        return Trainer(cfg, tcfg).run()
+
+    def test_loss_decreases(self, tmp_path):
+        out = self._run(tmp_path, 30)
+        assert out["final_loss"] < out["first_loss"], out
+
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        self._run(tmp_path, 10)          # writes step_10
+        out = self._run(tmp_path, 12)    # must resume at 10, run 2 steps
+        assert len(out["history"]) == 2
+        assert out["history"][0]["step"] == 10
+
+    def test_moe_arch_trains(self, tmp_path):
+        out = self._run(tmp_path, 8, arch="phi3.5-moe-42b")
+        assert np.isfinite(out["final_loss"])
+
+
+class TestServeEngine:
+    def test_engine_serves_queue(self):
+        from repro.serve import Request, ServeEngine
+        from repro.serve.serve_step import make_decode_step, make_prefill_step
+        cfg = smoke_config("yi-6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prefill = jax.jit(make_prefill_step(cfg, cache_len=64))
+        decode = jax.jit(make_decode_step(cfg))
+        eng = ServeEngine(cfg, params, prefill_fn=prefill, decode_fn=decode,
+                          cache_init_fn=None, max_batch=4, max_seq=64)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=12).astype(np.int32),
+                max_new_tokens=4))
+        done = eng.run(max_steps=64)
+        assert len(done) == 3
+        assert all(len(r.generated) >= 4 for r in done)
+        assert len(eng.stats["ttft"]) == 3
+
+    def test_sisa_batch_quantization(self):
+        from repro.serve import choose_decode_batch
+        cfg = smoke_config("yi-6b")
+        # must pick a slab-ladder size, never exceed need absurdly
+        for n in (1, 3, 9, 17, 100):
+            b = choose_decode_batch(n, cfg)
+            assert b in (1, 2, 4, 8, 16, 32, 64, 128)
