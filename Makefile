@@ -1,0 +1,19 @@
+# Local mirror of .github/workflows/ci.yml.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: ci lint test bench-smoke bench
+
+ci: lint test bench-smoke
+
+lint:
+	-ruff check src tests benchmarks || echo "ruff unavailable; CI runs it"
+
+test:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	$(PY) -m benchmarks.run --quick --json artifacts/bench-smoke.json
+
+bench:
+	$(PY) -m benchmarks.run

@@ -49,6 +49,11 @@ def main():
     print(f"[serve] decode batch choices (slab-quantized): "
           f"{eng.stats['batches']}")
     print(f"[serve] decode steps: {eng.stats['decode_steps']}")
+    if eng.stats["packed_speedup"]:
+        sp = eng.stats["packed_speedup"]
+        print(f"[serve] multi-tenant packing: {eng.stats['packed_prefills']} "
+              f"prefills co-scheduled, predicted step speedup "
+              f"x{np.mean(sp):.2f} (max x{np.max(sp):.2f})")
     assert len(done) == len(lengths)
 
 

@@ -1,0 +1,63 @@
+"""Version-compat shims for the jax APIs this repo relies on.
+
+The repo targets current jax, but the pinned toolchain in some
+environments (e.g. CI runners with jaxlib 0.4.x) predates a few renames:
+
+* ``pltpu.CompilerParams``       was ``pltpu.TPUCompilerParams``
+* ``jax.shard_map``              lived in ``jax.experimental.shard_map``
+  (with ``check_rep`` instead of ``check_vma``)
+* ``Compiled.cost_analysis()``   returned a single-element list of dicts
+
+Everything that touches one of these goes through this module so the
+version juggling lives in exactly one place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# --- Pallas TPU compiler params ------------------------------------------
+# Renamed TPUCompilerParams -> CompilerParams in jax 0.4.38+.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+# --- shard_map ------------------------------------------------------------
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the old/new kwarg spelling papered over."""
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as old
+    return old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+# --- cost analysis --------------------------------------------------------
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """Normalize ``Compiled.cost_analysis()`` to a flat dict.
+
+    Older jax returns ``[{...}]`` (one dict per computation, in practice a
+    single element); newer jax returns the dict directly.  Either may be
+    ``None`` on backends without cost modeling.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, Any] = {}
+        for entry in cost:
+            merged.update(entry)
+        return merged
+    return dict(cost)
+
+
+@functools.lru_cache(None)
+def has_scalar_prefetch() -> bool:
+    """PrefetchScalarGridSpec availability (all supported versions have
+    it; kept as a probe point for older wheels)."""
+    return hasattr(pltpu, "PrefetchScalarGridSpec")

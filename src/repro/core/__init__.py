@@ -14,6 +14,9 @@ from repro.core.slab import (ExecMode, SlabArrayConfig, SISA_128,
 from repro.core.scheduler import ExecutionPlan, Phase, Tile, plan_gemm
 from repro.core.simulator import (SimResult, simulate_gemm,
                                   simulate_workload, tile_cycles)
+from repro.core.multi import (GemmRequest, PackedSchedule, TileRun,
+                              pack_requests, packed_speedup,
+                              requests_from_workload, simulate_serial)
 from repro.core.redas import simulate_gemm_redas, simulate_workload_redas
 from repro.core.energy import area_report, area_overhead_vs_tpu, edp_ratio
 from repro.core.workloads import TABLE2, LLMWorkload
@@ -23,6 +26,8 @@ __all__ = [
     "ExecutionPlan", "Phase", "Tile", "plan_gemm",
     "SimResult", "simulate_gemm", "simulate_workload", "tile_cycles",
     "simulate_gemm_redas", "simulate_workload_redas",
+    "GemmRequest", "PackedSchedule", "TileRun", "pack_requests",
+    "packed_speedup", "requests_from_workload", "simulate_serial",
     "area_report", "area_overhead_vs_tpu", "edp_ratio",
     "TABLE2", "LLMWorkload",
 ]

@@ -94,7 +94,7 @@ def tile_cycles(t: Tile, group_h: int) -> int:
     return (t.tm - 1) + (t.tn - 1) + t.k + group_h
 
 
-def _phase_dram_bytes(phase: Phase, plan: ExecutionPlan, spec: AsicSpec) -> Dict[str, float]:
+def phase_dram_bytes(phase: Phase, plan: ExecutionPlan, spec: AsicSpec) -> Dict[str, float]:
     """Off-chip traffic for one phase (A resident, B streamed, C out)."""
     e = spec.elem_bytes
     # Distinct M extents in this phase: monolithic main phase has
@@ -112,14 +112,53 @@ def _phase_dram_bytes(phase: Phase, plan: ExecutionPlan, spec: AsicSpec) -> Dict
     return {"a": a_bytes, "b": b_bytes, "c": c_bytes}
 
 
+def phase_dynamic_energy_nj(phase: Phase, dram: Dict[str, float],
+                            spec: AsicSpec) -> float:
+    """Dynamic energy of one phase in nJ (MACs + SRAM/DRAM traffic).
+
+    Shared between the single-GEMM simulator and the multi-tenant packer
+    (``repro.core.multi``): dynamic energy depends only on the work, not
+    on how phases overlap in time.
+    """
+    e = spec.elem_bytes
+    act_stream = sum(t.tm * t.k for g in phase.group_tiles for t in g) * e
+    wgt_stream = sum(t.k * t.tn for g in phase.group_tiles for t in g) * e
+    out_bytes = sum(t.tm * t.tn for g in phase.group_tiles for t in g) * e
+    global_rw = (dram["a"] + dram["b"]) + (act_stream + wgt_stream)  # write once + read per stream
+    has_slab_bufs = spec.slab_act_buf_bytes > 0
+    # Fused groups bypass all but one weight buffer: weight bytes pay one
+    # slab-buffer hop per group; activations pay one hop always.
+    slab_rw = 2.0 * (act_stream + wgt_stream) if has_slab_bufs else 0.0
+    out_rw = 2.0 * out_bytes                                # write + drain read
+    dram_bytes = sum(dram.values())
+    return (
+        phase.macs * spec.e_mac_pj
+        + global_rw * spec.e_global_sram_pj_per_byte
+        + slab_rw * spec.e_slab_sram_pj_per_byte
+        + out_rw * spec.e_out_sram_pj_per_byte
+        + dram_bytes * spec.e_dram_pj_per_byte
+    ) / 1e3                                                 # pJ -> nJ
+
+
+def per_slab_static_nj(cfg: SlabArrayConfig, spec: AsicSpec) -> float:
+    """Static (leakage) energy per slab per cycle: array + slab buffers."""
+    per_slab_sa = spec.sa_static_nj / cfg.n_slabs
+    per_slab_buf = spec.slab_buf_static_nj / cfg.n_slabs if cfg.n_slabs > 1 else 0.0
+    return per_slab_sa + per_slab_buf
+
+
+def shared_static_nj(spec: AsicSpec) -> float:
+    """Static energy per cycle of the always-on shared buffers."""
+    return spec.global_buf_static_nj + spec.out_buf_static_nj
+
+
 def simulate_phase(phase: Phase, plan: ExecutionPlan, cfg: SlabArrayConfig,
                    spec: AsicSpec) -> SimResult:
-    e = spec.elem_bytes
     group_busy = [sum(tile_cycles(t, phase.group_h) for t in g)
                   for g in phase.group_tiles]
     compute_cycles = max(group_busy) if group_busy else 0
 
-    dram = _phase_dram_bytes(phase, plan, spec)
+    dram = phase_dram_bytes(phase, plan, spec)
     dram_bytes = sum(dram.values())
     bw_cycles = dram_bytes / spec.dram_bytes_per_cycle
     cycles = max(compute_cycles, bw_cycles)
@@ -144,28 +183,11 @@ def simulate_phase(phase: Phase, plan: ExecutionPlan, cfg: SlabArrayConfig,
     total_slab_cycles = cycles * cfg.n_slabs
 
     # --- static energy ---
-    per_slab_sa = spec.sa_static_nj / cfg.n_slabs
-    per_slab_buf = spec.slab_buf_static_nj / cfg.n_slabs if cfg.n_slabs > 1 else 0.0
-    e_static = (active_slab_cycles * (per_slab_sa + per_slab_buf)
-                + cycles * (spec.global_buf_static_nj + spec.out_buf_static_nj))
+    e_static = (active_slab_cycles * per_slab_static_nj(cfg, spec)
+                + cycles * shared_static_nj(spec))
 
     # --- dynamic energy ---
-    act_stream = sum(t.tm * t.k for g in phase.group_tiles for t in g) * e
-    wgt_stream = sum(t.k * t.tn for g in phase.group_tiles for t in g) * e
-    out_bytes = sum(t.tm * t.tn for g in phase.group_tiles for t in g) * e
-    global_rw = (dram["a"] + dram["b"]) + (act_stream + wgt_stream)  # write once + read per stream
-    has_slab_bufs = spec.slab_act_buf_bytes > 0
-    # Fused groups bypass all but one weight buffer: weight bytes pay one
-    # slab-buffer hop per group; activations pay one hop always.
-    slab_rw = 2.0 * (act_stream + wgt_stream) if has_slab_bufs else 0.0
-    out_rw = 2.0 * out_bytes                                # write + drain read
-    e_dynamic = (
-        phase.macs * spec.e_mac_pj
-        + global_rw * spec.e_global_sram_pj_per_byte
-        + slab_rw * spec.e_slab_sram_pj_per_byte
-        + out_rw * spec.e_out_sram_pj_per_byte
-        + dram_bytes * spec.e_dram_pj_per_byte
-    ) / 1e3                                                 # pJ -> nJ
+    e_dynamic = phase_dynamic_energy_nj(phase, dram, spec)
 
     return SimResult(
         cycles=cycles, macs=phase.macs, dram_bytes=dram_bytes,

@@ -7,6 +7,8 @@
 """
 from repro.kernels.sisa_gemm import BlockConfig, choose_block_config, sisa_gemm
 from repro.kernels.ops import sisa_matmul, sisa_einsum_2d, set_default_backend
+from repro.kernels.grouped_gemm import packed_decode_matmul, ragged_grouped_gemm
 
 __all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
-           "sisa_matmul", "sisa_einsum_2d", "set_default_backend"]
+           "sisa_matmul", "sisa_einsum_2d", "set_default_backend",
+           "packed_decode_matmul", "ragged_grouped_gemm"]

@@ -1,0 +1,127 @@
+"""Grouped/ragged GEMM Pallas kernel: many (Mᵢ, N, K) problems, one call.
+
+The kernel-side mirror of the multi-tenant slab scheduler
+(``repro.core.multi``): a single ``pallas_call`` whose grid covers G
+independent GEMM problems — MoE expert batches, per-request decode
+groups — where each problem ``g`` has a *ragged* row count
+``group_sizes[g] <= C``.  The monolithic baseline pads every problem to
+the full capacity ``C``; here ``group_sizes`` is scalar-prefetched into
+SMEM and row blocks beyond a group's extent skip the MXU entirely — the
+TPU analogue of power-gating the slabs above ``ceil(Mᵢ/slab_h)``.
+
+Block shapes come from :func:`repro.kernels.sisa_gemm.choose_block_config`
+(§3.2 mode selection): pass ``m_hint`` with the *typical* group size so a
+decode-skewed workload gets slab-height row blocks (e.g. 8/16) and the
+per-group padding waste stays under one sublane group, instead of every
+group rounding up to a 128-row MXU tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import CompilerParams
+from repro.kernels.sisa_gemm import choose_block_config
+
+
+def _ragged_kernel(sizes_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                   n_k: int, bc: int):
+    """Output-stationary grouped GEMM with per-group ragged row counts."""
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    k_step = pl.program_id(3)
+    size = sizes_ref[g]
+    row0 = i * bc
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Scale-in: row blocks entirely past this group's extent skip the MXU
+    # (the kernel-side power gating of slabs above ceil(M_g / slab_h)).
+    @pl.when(row0 < size)
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _drain():
+        rows = jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0) + row0
+        o_ref[0] = jnp.where(rows < size, acc_ref[...],
+                             jnp.zeros_like(acc_ref)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m_hint", "interpret"))
+def ragged_grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
+                        *, m_hint: Optional[int] = None,
+                        interpret: bool = False) -> jax.Array:
+    """x: (G, C, d), w: (G, d, f), group_sizes: (G,) -> (G, C, f).
+
+    Rows ``>= group_sizes[g]`` of the output are zero; the corresponding
+    input rows are never read by the MACs (whole skipped blocks) or are
+    masked at drain (the partial block), so padding content is irrelevant.
+    ``m_hint`` (static) is the expected per-group row count used for
+    block-shape selection; defaults to the capacity ``C``.
+    """
+    g, c, d = x.shape
+    g2, d2, f = w.shape
+    assert g == g2 and d == d2, (x.shape, w.shape)
+    assert group_sizes.shape == (g,), (group_sizes.shape, g)
+    cfg = choose_block_config(min(m_hint or c, c), f, d, x.dtype)
+    bc, bf, bd = cfg.bm, cfg.bn, cfg.bk
+    cp = ((c + bc - 1) // bc) * bc
+    dp = ((d + bd - 1) // bd) * bd
+    fp = ((f + bf - 1) // bf) * bf
+    if (cp, dp) != (c, d):
+        x = jnp.pad(x, ((0, 0), (0, cp - c), (0, dp - d)))
+    if (dp, fp) != (d, f):
+        w = jnp.pad(w, ((0, 0), (0, dp - d), (0, fp - f)))
+    n_c, n_f, n_k = cp // bc, fp // bf, dp // bd
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, n_c, n_f, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda gg, i, j, kk, sz: (gg, i, kk)),
+            pl.BlockSpec((1, bd, bf), lambda gg, i, j, kk, sz: (gg, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf),
+                               lambda gg, i, j, kk, sz: (gg, i, j)),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_kernel, n_k=n_k, bc=bc),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, cp, fp), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"ragged_grouped_gemm_g{g}_{bc}x{bf}x{bd}",
+    )(jnp.asarray(group_sizes, jnp.int32), x, w)
+    return out[:, :c, :f]
+
+
+def packed_decode_matmul(xs, w, *, interpret: bool = False) -> list:
+    """Batched heterogeneous decode: many (mᵢ, K) activations against one
+    weight (K, N), e.g. the co-scheduled per-request GEMMs the slab packer
+    admits together.  Shared weights make this a concatenation — the
+    kernel sees one tall GEMM and the SISA block scheduler tiles it —
+    then the outputs are split back per request.
+    """
+    from repro.kernels.ops import _pallas_matmul
+    sizes = [x.shape[0] for x in xs]
+    cat = jnp.concatenate(xs, axis=0)
+    out = _pallas_matmul(cat, w, interpret=interpret)
+    outs = []
+    off = 0
+    for s in sizes:
+        outs.append(out[off:off + s])
+        off += s
+    return outs

@@ -15,3 +15,14 @@ def grouped_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     acc = jnp.einsum("ecd,edf->ecf", x, w,
                      preferred_element_type=jnp.float32)
     return acc.astype(x.dtype)
+
+
+def ragged_grouped_gemm_ref(x: jnp.ndarray, w: jnp.ndarray,
+                            group_sizes: jnp.ndarray) -> jnp.ndarray:
+    """Ragged grouped GEMM oracle: rows >= group_sizes[g] are zeroed
+    before (and therefore after) the per-group contraction."""
+    c = x.shape[1]
+    mask = jnp.arange(c)[None, :, None] < group_sizes[:, None, None]
+    acc = jnp.einsum("ecd,edf->ecf", jnp.where(mask, x, 0), w,
+                     preferred_element_type=jnp.float32)
+    return jnp.where(mask, acc, 0).astype(x.dtype)

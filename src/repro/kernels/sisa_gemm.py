@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 LANE = 128
 
 
@@ -134,7 +136,7 @@ def sisa_gemm_splitk(a: jax.Array, b: jax.Array, cfg: BlockConfig,
         out_specs=pl.BlockSpec((1, cfg.bm, cfg.bn),
                                lambda kk, i, j: (kk, i, j)),
         out_shape=jax.ShapeDtypeStruct((n_k, m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,
@@ -168,7 +170,7 @@ def sisa_gemm(a: jax.Array, b: jax.Array, cfg: BlockConfig,
         out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

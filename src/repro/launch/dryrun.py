@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.analysis.roofline import (build_report, model_flops_for,
                                      save_report)
+from repro.compat import cost_analysis as compat_cost_analysis
 from repro.configs import (ASSIGNED_ARCHS, SHAPE_CELLS, cell_applicable,
                            get_config, smoke_config)
 from repro.distributed.sharding import (batch_specs, opt_state_specs,
@@ -180,7 +181,7 @@ def lower_cell(arch: str, cell_name: str, mesh_kind: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat_cost_analysis(compiled)
     mem = _mem_analysis(compiled)
     hlo = compiled.as_text()
     report = build_report(

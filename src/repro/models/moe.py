@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
 from repro.models.common import Array, activation, dense_init
 
 
@@ -75,17 +76,14 @@ def _moe_local(x: Array, p, cfg, act: str, e_offset: int, e_local: int,
     vals = jnp.where(is_local[:, None], xt[tok_of], 0).astype(x.dtype)
     buf = jnp.zeros((e_local, cap, d), x.dtype).at[le, lp].add(vals)
 
+    # Ragged per-expert row counts: rows of ``buf`` are a dense prefix of
+    # length min(#routed, cap) — exactly what the grouped kernel skips
+    # past (the multi-tenant scale-in case).
+    counts = jnp.sum(onehot, axis=0)[e_offset:e_offset + e_local]
+    sizes = jnp.minimum(counts, cap)
+
     # Expert FFN (grouped GEMM — the SISA skew case).
-    h = jnp.einsum("ecd,edf->ecf", buf, p["up"],
-                   preferred_element_type=jnp.float32)
-    if "gate" in p:
-        g = jnp.einsum("ecd,edf->ecf", buf, p["gate"],
-                       preferred_element_type=jnp.float32)
-        h = activation(act)(g) * h
-    else:
-        h = activation(act)(h)
-    out_e = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["down"],
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out_e = _expert_ffn(buf, p, act, sizes=sizes)
 
     # Combine: gather each pair's expert output, weight, sum over k.
     pair_out = out_e[le, lp] * (is_local * flat_w)[:, None].astype(x.dtype)
@@ -112,18 +110,44 @@ def set_ep_impl(impl: str) -> None:
     EP_IMPL["impl"] = impl
 
 
-def _expert_ffn(buf: Array, p, act: str) -> Array:
-    """(E_loc, C, d) -> (E_loc, C, d) through the local experts."""
-    h = jnp.einsum("ecd,edf->ecf", buf, p["up"],
-                   preferred_element_type=jnp.float32)
+# "xla": dense einsum over the capacity-padded buffer (default; composes
+#        with GSPMD).  "pallas"/"pallas_interpret": the ragged grouped
+#        kernel (repro.kernels.grouped_gemm) with per-expert row counts —
+#        row blocks past an expert's real batch skip the MXU, the
+#        kernel-side analogue of giving idle slabs to other tenants.
+EXPERT_BACKEND = {"impl": "xla"}
+
+
+def set_expert_backend(impl: str) -> None:
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    EXPERT_BACKEND["impl"] = impl
+
+
+def _grouped(x_ecd: Array, w_edf: Array, sizes) -> Array:
+    """Per-expert contraction, ragged-aware when a kernel backend is on."""
+    impl = EXPERT_BACKEND["impl"]
+    if impl != "xla" and sizes is not None:
+        from repro.kernels.grouped_gemm import ragged_grouped_gemm
+        return ragged_grouped_gemm(
+            x_ecd, w_edf.astype(x_ecd.dtype), sizes,
+            interpret=(impl == "pallas_interpret")).astype(jnp.float32)
+    return jnp.einsum("ecd,edf->ecf", x_ecd, w_edf,
+                      preferred_element_type=jnp.float32)
+
+
+def _expert_ffn(buf: Array, p, act: str, sizes=None) -> Array:
+    """(E_loc, C, d) -> (E_loc, C, d) through the local experts.
+
+    ``sizes`` (E_loc,) are the real per-expert batch sizes when rows form
+    a dense prefix (the psum dispatch path); ``None`` means dense.
+    """
+    h = _grouped(buf, p["up"], sizes)
     if "gate" in p:
-        g = jnp.einsum("ecd,edf->ecf", buf, p["gate"],
-                       preferred_element_type=jnp.float32)
+        g = _grouped(buf, p["gate"], sizes)
         h = activation(act)(g) * h
     else:
         h = activation(act)(h)
-    return jnp.einsum("ecf,efd->ecd", h.astype(buf.dtype), p["down"],
-                      preferred_element_type=jnp.float32).astype(buf.dtype)
+    return _grouped(h.astype(buf.dtype), p["down"], sizes).astype(buf.dtype)
 
 
 def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
@@ -212,7 +236,7 @@ def moe_apply(p, x: Array, cfg, *, mesh=None,
             return y, jax.lax.pmean(aux, all_axes)
         out_specs = (bspec, P())
 
-    y, aux = jax.shard_map(
+    y, aux = compat_shard_map(
         shard_fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=out_specs, check_vma=False)(*args)
     return y, aux

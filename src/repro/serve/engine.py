@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import SISA_128, simulate_workload
+from repro.core import (GemmRequest, SISA_128, packed_speedup,
+                        requests_from_workload, simulate_workload)
 from repro.core.workloads import GemmLayer, LLMWorkload
 
 SLAB_LADDER = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -73,12 +74,39 @@ def choose_decode_batch(n_live: int, cfg: ModelConfig,
     return best_b
 
 
+def plan_step_packing(decode_bsz: int, prompt_lens: List[int],
+                      cfg: ModelConfig, max_coresident: int = 4):
+    """Multi-tenant co-schedule of one engine step on the slab array.
+
+    The decode batch's per-layer GEMMs (skewed, m = decode_bsz) are
+    packed together with the *next waiting prompts'* prefill GEMMs: while
+    the decode GEMMs leave slab groups idle (narrow k/v projections, few
+    N tiles), prefill work from queued requests rides on them instead of
+    waiting for the full decode pass — the multi-GEMM scheduling the
+    single-tenant §3.2 planner cannot express.
+
+    Returns ``(packed_schedule, serial_result, n_prefills_packed)``.
+    """
+    wl = _llm_workload_of(cfg)
+    reqs: List[GemmRequest] = []
+    if decode_bsz > 0:
+        reqs = requests_from_workload(wl.gemms(decode_bsz), tag="decode")
+    prompts = prompt_lens[:max_coresident]
+    for s in prompts:
+        reqs += requests_from_workload(wl.gemms(max(1, s)), tag="prefill",
+                                       start_rid=len(reqs))
+    sp, packed, serial = packed_speedup(reqs, SISA_128)
+    return packed, serial, len(prompts)
+
+
 class ServeEngine:
     """Drives jitted prefill/decode over a request queue."""
 
     def __init__(self, cfg: ModelConfig, params, *, prefill_fn: Callable,
                  decode_fn: Callable, cache_init_fn: Callable,
-                 max_batch: int = 8, max_seq: int = 256):
+                 max_batch: int = 8, max_seq: int = 256,
+                 multi_tenant: bool = True,
+                 expert_backend: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.prefill_fn = prefill_fn
@@ -86,9 +114,15 @@ class ServeEngine:
         self.cache_init_fn = cache_init_fn
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.multi_tenant = multi_tenant
         self.queue: Deque[Request] = deque()
         self.stats: Dict[str, Any] = {"batches": [], "ttft": [],
-                                      "decode_steps": 0}
+                                      "decode_steps": 0,
+                                      "packed_speedup": [],
+                                      "packed_prefills": 0}
+        if expert_backend is not None:
+            from repro.models.moe import set_expert_backend
+            set_expert_backend(expert_backend)
 
     def submit(self, req: Request) -> None:
         req.arrived = time.time()
@@ -114,6 +148,17 @@ class ServeEngine:
             bsz = max(1, min(bsz, len(self.queue), self.max_batch))
             self.stats["batches"].append(bsz)
             active = [self.queue.popleft() for _ in range(bsz)]
+            if self.multi_tenant:
+                # Predict the slab-level co-schedule of this step: decode
+                # GEMMs of the admitted batch packed with the waiting
+                # prompts' prefill GEMMs on idle slab groups.
+                waiting = [len(r.prompt) for r in self.queue]
+                packed, serial, n_pre = plan_step_packing(
+                    bsz, waiting, self.cfg)
+                if packed.makespan > 0:
+                    self.stats["packed_speedup"].append(
+                        serial.cycles / packed.makespan)
+                self.stats["packed_prefills"] += n_pre
             # Prefill each (latency-sensitive, slab-mode skewed GEMMs),
             # then batch the decode loop.
             caches, positions = [], []

@@ -1,0 +1,140 @@
+"""Minimal property-testing fallback used when ``hypothesis`` is absent.
+
+CI installs the real hypothesis (declared in ``pyproject.toml``); hermetic
+environments without network access fall back to this shim so the tier-1
+suite still collects and runs.  It implements just the surface this repo
+uses — ``given``, ``settings``, ``strategies.integers`` /
+``sampled_from`` / ``lists`` / ``booleans`` / ``just`` / ``tuples`` —
+with deterministic pseudo-random example generation (fixed seed per
+test, so runs are reproducible) and no shrinking: a failing example is
+reported verbatim in the assertion chain.
+
+Installed into ``sys.modules`` by ``tests/conftest.py`` *only* when the
+real package is missing; never shadows a real install.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None) -> Strategy:
+    lo = -(2 ** 31) if min_value is None else min_value
+    hi = 2 ** 31 if max_value is None else max_value
+
+    def draw(rng: random.Random):
+        # Bias toward the boundaries — that's where planners break.
+        r = rng.random()
+        if r < 0.08:
+            return lo
+        if r < 0.16:
+            return hi
+        if r < 0.4:
+            return min(hi, lo + rng.randint(0, min(16, hi - lo)))
+        return rng.randint(lo, hi)
+
+    return Strategy(draw)
+
+
+def sampled_from(elements) -> Strategy:
+    seq = list(elements)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def decorate(fn):
+        sig_params = [p for p in inspect.signature(fn).parameters]
+        pos_kw = dict(zip(sig_params, arg_strategies))
+        pos_kw.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(
+                wrapper, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for i in range(max_examples):
+                drawn = {k: s.example(rng) for k, s in pos_kw.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {drawn!r}") from exc
+
+        # pytest must not mistake the property's parameters for fixtures:
+        # hide the wrapped function's signature.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    """Degraded ``assume``: treat a failed assumption as a passing draw
+    by raising nothing (the caller must early-return on False)."""
+    return bool(condition)
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` in ``sys.modules``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "just", "lists",
+                 "tuples"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,26 @@
+"""Test-session bootstrap.
+
+* Ensures ``src`` is importable even without ``PYTHONPATH=src`` (CI sets
+  it anyway; local ``pytest`` invocations shouldn't need it).
+* Installs the deterministic property-testing fallback when the real
+  ``hypothesis`` package is not available (hermetic environments); CI
+  installs the real one from ``pyproject.toml``.
+"""
+import importlib.util
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.isdir(_SRC) and os.path.abspath(_SRC) not in map(
+        os.path.abspath, sys.path):
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()

@@ -6,6 +6,7 @@ import pytest
 
 from repro.analysis.hlo_cost import analyze, split_computations
 from repro.analysis.hlo_utils import collective_bytes
+from repro.compat import cost_analysis
 
 X = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 
@@ -24,8 +25,8 @@ def test_xla_costs_count_loop_bodies_once():
         out, _ = jax.lax.scan(lambda c, _: (c @ c, None), y, None, length=10)
         return out
 
-    f1 = jax.jit(one).lower(X).compile().cost_analysis()["flops"]
-    f10 = jax.jit(ten).lower(X).compile().cost_analysis()["flops"]
+    f1 = cost_analysis(jax.jit(one).lower(X).compile())["flops"]
+    f10 = cost_analysis(jax.jit(ten).lower(X).compile())["flops"]
     assert f1 == f10        # the XLA behavior our walker corrects
 
 

@@ -1,0 +1,198 @@
+"""Multi-tenant slab scheduler (repro.core.multi) + grouped kernel tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SISA_128, SlabArrayConfig
+from repro.core.multi import (GemmRequest, pack_requests, packed_speedup,
+                              requests_from_workload, simulate_serial)
+from repro.core.workloads import TABLE2
+from repro.hw.specs import SISA_ASIC
+
+RNG = np.random.default_rng(7)
+
+
+def _random_requests(rng: np.random.Generator, n: int, m_hi: int = 300):
+    return [GemmRequest(rid=i, m=int(rng.integers(1, m_hi + 1)),
+                        n=int(rng.integers(1, 2049)),
+                        k=int(rng.integers(1, 1025)))
+            for i in range(n)]
+
+
+class TestPacking:
+    def test_empty(self):
+        sched = pack_requests([])
+        assert sched.makespan == 0.0 and not sched.tile_runs
+
+    def test_single_request_matches_shape(self):
+        reqs = [GemmRequest(0, 12, 896, 896)]
+        sched = pack_requests(reqs)
+        assert sched.result.macs == 12 * 896 * 896
+
+    def test_narrow_projections_pack_8x(self):
+        # 8 single-N-tile GEMMs: serial strands 7/8 slabs, packed doesn't.
+        reqs = [GemmRequest(i, 8, 128, 896) for i in range(8)]
+        sp, packed, _ = packed_speedup(reqs)
+        assert packed.chosen == "packed"
+        assert sp > 7.5
+
+    def test_rider_on_gated_slab(self):
+        # m=100 uses ceil(100/16)=7 slabs; a small GEMM rides on the 8th.
+        reqs = [GemmRequest(0, 100, 512, 512), GemmRequest(1, 8, 128, 896)]
+        packed = pack_requests(reqs)
+        assert packed.chosen == "packed"
+        co = [r for r in packed.tile_runs if r.rid == 1]
+        assert co, "rider never scheduled"
+
+    def test_skewed_decode_batch_beats_serial(self):
+        # Acceptance: m <= 16, many concurrent requests -> packed wins.
+        wl = TABLE2["Qwen2.5-0.5B"]
+        reqs = []
+        for _ in range(8):
+            for layer in wl.layers:
+                if layer.name == "lm_head":
+                    continue
+                reqs.append(GemmRequest(len(reqs), 4, layer.n, layer.k))
+        sp, packed, serial = packed_speedup(reqs)
+        assert sp > 1.05, (sp, packed.chosen)
+        assert packed.makespan < serial.cycles
+
+    def test_requests_from_workload_expands_occurrences(self):
+        reqs = requests_from_workload([(4, 128, 896, 3), (8, 256, 896, 1)])
+        assert len(reqs) == 4
+        assert sorted({r.rid for r in reqs}) == [0, 1, 2, 3]
+
+    def test_invalid_dims_raise(self):
+        with pytest.raises(ValueError):
+            GemmRequest(0, 0, 128, 128)
+
+    def test_energy_accounting_positive(self):
+        reqs = [GemmRequest(i, 8, 896, 896) for i in range(4)]
+        packed = pack_requests(reqs)
+        assert packed.result.energy_nj > 0
+        assert packed.result.energy_dynamic_nj == pytest.approx(
+            sum(r.energy_dynamic_nj for r in packed.per_request.values()))
+
+    def test_gating_fraction_bounded(self):
+        reqs = [GemmRequest(i, 8, 128, 896) for i in range(3)]
+        packed = pack_requests(reqs)
+        assert 0.0 <= packed.result.anygated_fraction <= 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_property_macs_conserved(n, seed):
+    """Packed execution performs exactly the serial sum of MACs."""
+    reqs = _random_requests(np.random.default_rng(seed), n)
+    packed = pack_requests(reqs)
+    serial = simulate_serial(reqs)
+    assert packed.result.macs == pytest.approx(serial.macs)
+    assert packed.result.macs == sum(r.macs for r in reqs)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 2**31))
+def test_property_coresident_slabs_disjoint(n, seed):
+    """No two co-resident GEMMs ever share a slab."""
+    reqs = _random_requests(np.random.default_rng(seed), n)
+    packed = pack_requests(reqs, allow_serial_fallback=False)
+    runs = packed.tile_runs
+    for i, a in enumerate(runs):
+        for b in runs[i + 1:]:
+            if a.rid != b.rid and a.overlaps(b):
+                assert not (set(a.slabs) & set(b.slabs)), (a, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**31),
+       n_slabs=st.sampled_from([2, 4, 8]))
+def test_property_packed_never_slower_than_serial(n, seed, n_slabs):
+    """Packed cycles <= serial cycles for any workload mix."""
+    cfg = SlabArrayConfig(array_h=128, array_w=128, n_slabs=n_slabs)
+    reqs = _random_requests(np.random.default_rng(seed), n)
+    packed = pack_requests(reqs, cfg, SISA_ASIC)
+    serial = simulate_serial(reqs, cfg, SISA_ASIC)
+    assert packed.makespan <= serial.cycles * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 2**31))
+def test_property_slab_capacity_never_exceeded(n, seed):
+    """At any instant the packer uses at most n_slabs slabs."""
+    reqs = _random_requests(np.random.default_rng(seed), n, m_hi=200)
+    packed = pack_requests(reqs, allow_serial_fallback=False)
+    events = sorted({r.start for r in packed.tile_runs})
+    for t in events:
+        live = [r for r in packed.tile_runs if r.start <= t < r.end]
+        used = [s for r in live for s in r.slabs]
+        assert len(used) == len(set(used))
+        assert len(used) <= SISA_128.n_slabs
+
+
+class TestGroupedKernel:
+    @pytest.mark.parametrize("g,c,d,f,sizes", [
+        (4, 24, 64, 96, (3, 24, 0, 17)),
+        (2, 8, 8, 8, (8, 5)),
+        (8, 160, 128, 256, (1, 160, 16, 33, 0, 100, 128, 7)),
+    ])
+    def test_ragged_matches_ref(self, g, c, d, f, sizes):
+        from repro.kernels.grouped_gemm import ragged_grouped_gemm
+        from repro.kernels.ref import ragged_grouped_gemm_ref
+        x = jnp.asarray(RNG.normal(size=(g, c, d)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(g, d, f)), jnp.float32)
+        s = jnp.asarray(sizes, jnp.int32)
+        out = ragged_grouped_gemm(x, w, s, interpret=True)
+        ref = ragged_grouped_gemm_ref(x, w, s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-3, rtol=1e-4)
+
+    def test_m_hint_scale_in_blocks(self):
+        from repro.kernels.grouped_gemm import ragged_grouped_gemm
+        from repro.kernels.ref import ragged_grouped_gemm_ref
+        x = jnp.asarray(RNG.normal(size=(4, 128, 64)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(4, 64, 128)), jnp.float32)
+        s = jnp.asarray([5, 12, 1, 16], jnp.int32)
+        out = ragged_grouped_gemm(x, w, s, m_hint=16, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ragged_grouped_gemm_ref(x, w, s)),
+            atol=1e-3, rtol=1e-4)
+
+    def test_moe_backend_agreement(self):
+        import jax
+        from repro.configs import smoke_config
+        from repro.models.moe import (moe_apply, moe_init,
+                                      set_expert_backend)
+        cfg = smoke_config("dbrx-132b")
+        p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                              jnp.float32)
+        y0, _ = moe_apply(p, x, cfg)
+        set_expert_backend("pallas_interpret")
+        try:
+            y1, _ = moe_apply(p, x, cfg)
+        finally:
+            set_expert_backend("xla")
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_packed_decode_matmul(self):
+        from repro.kernels.grouped_gemm import packed_decode_matmul
+        xs = [jnp.asarray(RNG.normal(size=(m, 64)), jnp.float32)
+              for m in (1, 12, 5)]
+        w = jnp.asarray(RNG.normal(size=(64, 130)), jnp.float32)
+        outs = packed_decode_matmul(xs, w, interpret=True)
+        for x, o in zip(xs, outs):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(x @ w),
+                                       atol=1e-3, rtol=1e-4)
+
+
+class TestEngineIntegration:
+    def test_plan_step_packing(self):
+        from repro.configs import get_config
+        from repro.serve.engine import plan_step_packing
+        cfg = get_config("qwen2.5-0.5b")
+        packed, serial, n_pre = plan_step_packing(8, [12, 40, 100], cfg)
+        assert n_pre == 3
+        assert packed.makespan <= serial.cycles * (1 + 1e-9)
+        assert packed.result.macs == pytest.approx(serial.macs)
