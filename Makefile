@@ -2,18 +2,23 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: ci lint test bench-smoke bench
+.PHONY: ci lint test bench-smoke bench bench-baseline
 
 ci: lint test bench-smoke
 
 lint:
-	-ruff check src tests benchmarks || echo "ruff unavailable; CI runs it"
+	-ruff check src tests benchmarks scripts || echo "ruff unavailable; CI runs it"
 
 test:
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
 	$(PY) -m benchmarks.run --quick --json artifacts/bench-smoke.json
+	$(PY) scripts/check_bench.py artifacts/bench-smoke.json benchmarks/baseline.json
+
+# Refresh the committed bench baseline after an intentional perf change.
+bench-baseline:
+	$(PY) -m benchmarks.run --quick --json benchmarks/baseline.json
 
 bench:
 	$(PY) -m benchmarks.run

@@ -11,7 +11,6 @@ Two measurements per Table-2 shape:
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
@@ -35,6 +34,65 @@ SHAPES = [
 def _pad_eff(m: int, bm: int) -> float:
     padded = ((m + bm - 1) // bm) * bm
     return m / padded
+
+
+# Grouped-GEMM routing scenarios: per-group row counts an MoE layer (or
+# grouped decode) would dispatch.  The capacity layout pads every group
+# to max(sizes) rounded up; the flat layout packs groups at block-aligned
+# cumulative offsets (waste < one row block per group).
+GROUP_SCENARIOS = [
+    ("moe_uniform", (96,) * 8, 256, 512),
+    ("moe_skewed", (512, 128, 64, 32, 16, 8, 4, 0), 256, 512),
+    ("decode_groups", (1, 2, 1, 4, 1, 2, 8, 1), 256, 512),
+]
+GROUP_SCENARIOS_QUICK = [
+    ("moe_uniform", (24,) * 4, 64, 128),
+    ("moe_skewed", (96, 16, 8, 0), 64, 128),
+    ("decode_groups", (1, 2, 4, 1), 64, 128),
+]
+
+
+def bench_grouped_kernels(quick: bool = False) -> List[Row]:
+    """Flat vs capacity-padded grouped GEMM.
+
+    Wall time measures the capacity-dense einsum (the xla default path on
+    this host); the derived column is the layout comparison that holds on
+    the accelerator: useful-row fraction of the flat block-aligned layout
+    vs padding every group to capacity — the kernel-level Fig-4 analogue
+    for grouped workloads.
+    """
+    from repro.kernels.grouped_gemm import flat_block_rows, flat_group_offsets
+
+    rows, out = [], []
+    for name, sizes, d, f in (GROUP_SCENARIOS_QUICK if quick
+                              else GROUP_SCENARIOS):
+        g = len(sizes)
+        cap = max(8, ((max(sizes) + 7) // 8) * 8)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(g, cap, d)),
+                        jnp.float32)
+        w = jnp.asarray(np.random.default_rng(1).normal(size=(g, d, f)),
+                        jnp.float32)
+        fdense = jax.jit(lambda x, w: jnp.einsum(
+            "gcd,gdf->gcf", x, w, preferred_element_type=jnp.float32))
+        us = timeit(lambda x=x, w=w: jax.block_until_ready(fdense(x, w)))
+        bm = flat_block_rows(min(cap, 64), f, d, jnp.float32)
+        s = jnp.asarray(sizes, jnp.int32)
+        flat_rows = int(flat_group_offsets(s, bm)[-1])
+        useful = int(sum(sizes))
+        padded_rows = g * cap
+        eff_flat = useful / flat_rows if flat_rows else 1.0
+        eff_pad = useful / padded_rows if padded_rows else 1.0
+        gain = eff_flat / eff_pad if eff_pad else 1.0
+        rows.append((name, g, cap, d, f, bm, useful, flat_rows, padded_rows,
+                     f"{eff_flat:.3f}", f"{eff_pad:.3f}", f"{gain:.2f}"))
+        out.append((f"grouped_{name}", us,
+                    f"flat_eff {eff_flat:.2f} vs padded {eff_pad:.2f} "
+                    f"({gain:.1f}x useful-rows, bm={bm})"))
+    write_csv("grouped_bench",
+              ["name", "g", "cap", "d", "f", "bm", "useful_rows",
+               "flat_rows", "padded_rows", "eff_flat", "eff_pad", "gain"],
+              rows)
+    return out
 
 
 def bench_kernels() -> List[Row]:

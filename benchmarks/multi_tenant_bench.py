@@ -23,7 +23,7 @@ import time
 from typing import List, Tuple
 
 from benchmarks.common import Row, write_csv
-from repro.core import SISA_128, packed_speedup
+from repro.core import packed_speedup, SISA_128
 from repro.core.multi import GemmRequest
 from repro.core.workloads import TABLE2
 from repro.hw.specs import SISA_ASIC
@@ -55,9 +55,9 @@ def _scenarios(quick: bool):
              for m in ([3, 16, 1, 9] if quick else
                        [3, 16, 1, 9, 12, 2, 16, 5, 7, 1, 14, 4, 10, 6, 2, 8])]),
         "mixed_serving": _mk_requests(
-            [(16, l.n, l.k) for l in wl.layers if l.name != "lm_head"]
-            + [(s, l.n, l.k) for s in ([40] if quick else [12, 40, 100, 150])
-               for l in wl.layers if l.name != "lm_head"]),
+            [(16, ly.n, ly.k) for ly in wl.layers if ly.name != "lm_head"]
+            + [(s, ly.n, ly.k) for s in ([40] if quick else [12, 40, 100, 150])
+               for ly in wl.layers if ly.name != "lm_head"]),
     }
     return scen
 

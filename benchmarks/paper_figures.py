@@ -9,10 +9,9 @@ from __future__ import annotations
 import time
 from typing import List
 
-from benchmarks.common import Row, timeit, write_csv
-from repro.core import (MONOLITHIC_128, SISA_128, TABLE2, area_overhead_vs_tpu,
-                        area_report, plan_gemm, simulate_gemm,
-                        simulate_workload)
+from benchmarks.common import Row, write_csv
+from repro.core import (area_overhead_vs_tpu, area_report, MONOLITHIC_128,
+                        simulate_gemm, simulate_workload, SISA_128, TABLE2)
 from repro.core.redas import simulate_workload_redas
 from repro.hw.specs import SISA_ASIC, TPU_BASELINE_ASIC
 

@@ -13,10 +13,8 @@ import time
 from typing import List
 
 from benchmarks.common import Row, write_csv
-from repro.core import TABLE2, MONOLITHIC_128, SlabArrayConfig, \
-    simulate_workload
-from repro.core.scheduler import plan_gemm
-from repro.core.simulator import simulate_phase
+from repro.core import (MONOLITHIC_128, simulate_workload, SlabArrayConfig,
+                        TABLE2)
 from repro.hw.specs import SISA_ASIC, TPU_BASELINE_ASIC
 
 

@@ -1,0 +1,78 @@
+"""Bench-regression gate: compare a fresh --quick run against the
+committed baseline.
+
+Usage:
+    python scripts/check_bench.py CURRENT.json benchmarks/baseline.json \
+        [--tol 3.0] [--floor-us 200]
+
+Policy (tuned for noisy shared CI runners):
+
+* every benchmark name present in the baseline must be present in the
+  current run — a vanished benchmark is a coverage regression, not noise;
+* wall-clock ``us_per_call`` may not exceed ``tol x`` the baseline,
+  where both sides are first clamped up to ``--floor-us`` so that
+  micro-benchmarks in the single-digit-microsecond range (pure jit
+  dispatch) cannot trip the gate on scheduler jitter;
+* new benchmarks (present only in the current run) pass — they join the
+  gate when the baseline is regenerated.
+
+Regenerate the baseline after an intentional perf change with:
+    PYTHONPATH=src python -m benchmarks.run --quick --json \
+        benchmarks/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data.get("results", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="JSON from benchmarks.run --quick --json")
+    ap.add_argument("baseline", help="committed benchmarks/baseline.json")
+    ap.add_argument("--tol", type=float, default=3.0,
+                    help="max allowed us_per_call ratio vs baseline")
+    ap.add_argument("--floor-us", type=float, default=200.0,
+                    help="clamp both sides up to this before the ratio "
+                         "(absorbs dispatch-level jitter)")
+    args = ap.parse_args()
+
+    cur, base = load(args.current), load(args.baseline)
+    failures, lines = [], []
+    for name, b in sorted(base.items()):
+        if name not in cur:
+            failures.append(f"{name}: missing from current run")
+            continue
+        b_us = max(float(b["us_per_call"]), args.floor_us)
+        c_us = max(float(cur[name]["us_per_call"]), args.floor_us)
+        ratio = c_us / b_us
+        status = "ok" if ratio <= args.tol else "REGRESSION"
+        lines.append(f"{status:>10}  {name:<32} {cur[name]['us_per_call']:>10.1f}us"
+                     f"  baseline {b['us_per_call']:>10.1f}us  x{ratio:.2f}")
+        if ratio > args.tol:
+            failures.append(f"{name}: {ratio:.2f}x baseline "
+                            f"(tol {args.tol:.2f}x)")
+    new = sorted(set(cur) - set(base))
+    print(f"bench gate: {len(base)} baselined, {len(new)} new, "
+          f"tol {args.tol:.1f}x (floor {args.floor_us:.0f}us)")
+    for ln in lines:
+        print(ln)
+    for name in new:
+        print(f"{'new':>10}  {name:<32} {cur[name]['us_per_call']:>10.1f}us"
+              "  (not gated until baseline refresh)")
+    if failures:
+        print("\nFAIL:", *failures, sep="\n  ")
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python scripts/gen_experiments_tables.py
 """
-import re
 import sys
 
 sys.path.insert(0, "src")

@@ -11,8 +11,8 @@ os.environ["XLA_FLAGS"] = (
 import argparse
 from collections import defaultdict
 
-from repro.launch.dryrun import lower_cell
 from repro.analysis import hlo_cost as H
+from repro.launch.dryrun import lower_cell
 
 
 def main():

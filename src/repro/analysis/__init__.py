@@ -1,6 +1,6 @@
 from repro.analysis.hlo_utils import collective_bytes, count_op
-from repro.analysis.roofline import (RooflineReport, build_report,
-                                     model_flops_for)
+from repro.analysis.roofline import (build_report, model_flops_for,
+                                     RooflineReport)
 
 __all__ = ["collective_bytes", "count_op", "RooflineReport",
            "build_report", "model_flops_for"]

@@ -13,10 +13,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Optional
+from typing import Dict
 
-from repro.analysis.hlo_utils import CollectiveStats, collective_bytes
-from repro.hw.specs import TPU_V5E, ChipSpec
+from repro.hw.specs import ChipSpec, TPU_V5E
 
 
 @dataclasses.dataclass

@@ -14,7 +14,6 @@ mesh B).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import re

@@ -1,7 +1,7 @@
 """Architecture and shape-cell configs."""
-from repro.configs.base import (ModelConfig, MoEConfig, ShapeCell,
-                                SHAPE_CELLS, cell_applicable)
-from repro.configs.registry import (ASSIGNED_ARCHS, all_configs, get_config,
+from repro.configs.base import (cell_applicable, ModelConfig, MoEConfig,
+                                SHAPE_CELLS, ShapeCell)
+from repro.configs.registry import (all_configs, ASSIGNED_ARCHS, get_config,
                                     smoke_config)
 
 __all__ = ["ModelConfig", "MoEConfig", "ShapeCell", "SHAPE_CELLS",

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 # Layer kinds used in ``layer_pattern``.

@@ -1,4 +1,5 @@
-"""Selectable config: ``--arch recurrentgemma-2b`` (canonical definition in repro.configs.registry)."""
+"""Selectable config: ``--arch recurrentgemma-2b`` (canonical definition
+in repro.configs.registry)."""
 from repro.configs.registry import RECURRENTGEMMA_2B as CONFIG
 
 __all__ = ["CONFIG"]

@@ -10,8 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.configs.base import (ATTN, BIDIR, LOCAL, RGLRU, WKV, MoEConfig,
-                                ModelConfig)
+from repro.configs.base import ATTN, LOCAL, ModelConfig, MoEConfig, RGLRU, WKV
 
 _REGISTRY: Dict[str, ModelConfig] = {}
 

@@ -9,17 +9,16 @@ Public surface:
 * ``sisa_matmul`` — the JAX op (Pallas-backed) that applies SISA's
   shape-adaptive tiling on TPU (see ``repro.core.sisa_op``).
 """
-from repro.core.slab import (ExecMode, SlabArrayConfig, SISA_128,
-                             MONOLITHIC_128)
-from repro.core.scheduler import ExecutionPlan, Phase, Tile, plan_gemm
-from repro.core.simulator import (SimResult, simulate_gemm,
-                                  simulate_workload, tile_cycles)
-from repro.core.multi import (GemmRequest, PackedSchedule, TileRun,
-                              pack_requests, packed_speedup,
-                              requests_from_workload, simulate_serial)
+from repro.core.energy import area_overhead_vs_tpu, area_report, edp_ratio
+from repro.core.multi import (GemmRequest, pack_requests, packed_speedup,
+                              PackedSchedule, requests_from_workload,
+                              simulate_serial, TileRun)
 from repro.core.redas import simulate_gemm_redas, simulate_workload_redas
-from repro.core.energy import area_report, area_overhead_vs_tpu, edp_ratio
-from repro.core.workloads import TABLE2, LLMWorkload
+from repro.core.scheduler import ExecutionPlan, Phase, plan_gemm, Tile
+from repro.core.simulator import (SimResult, simulate_gemm, simulate_workload,
+                                  tile_cycles)
+from repro.core.slab import ExecMode, MONOLITHIC_128, SISA_128, SlabArrayConfig
+from repro.core.workloads import LLMWorkload, TABLE2
 
 __all__ = [
     "ExecMode", "SlabArrayConfig", "SISA_128", "MONOLITHIC_128",

@@ -32,19 +32,18 @@ schedule, so packing never loses to the paper's per-GEMM baseline.
 """
 from __future__ import annotations
 
+from collections import deque
 import dataclasses
 import heapq
 import math
-from collections import deque
 from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.hw.specs import AsicSpec, SISA_ASIC
 from repro.core.scheduler import ExecutionPlan, Phase, Tile
-from repro.core.simulator import (SimResult, per_slab_static_nj,
-                                  phase_dram_bytes, phase_dynamic_energy_nj,
-                                  shared_static_nj, simulate_gemm,
-                                  tile_cycles)
-from repro.core.slab import ExecMode, SlabArrayConfig, SISA_128, split_n_tiles
+from repro.core.simulator import (per_slab_static_nj, phase_dram_bytes,
+                                  phase_dynamic_energy_nj, shared_static_nj,
+                                  SimResult, simulate_gemm, tile_cycles)
+from repro.core.slab import ExecMode, SISA_128, SlabArrayConfig, split_n_tiles
+from repro.hw.specs import AsicSpec, SISA_ASIC
 
 
 @dataclasses.dataclass(frozen=True)

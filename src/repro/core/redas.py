@@ -33,9 +33,9 @@ from __future__ import annotations
 import math
 from typing import List, Sequence, Tuple
 
-from repro.hw.specs import AsicSpec, TPU_BASELINE_ASIC
 from repro.core.simulator import SimResult, simulate_gemm
 from repro.core.slab import SlabArrayConfig
+from repro.hw.specs import AsicSpec, TPU_BASELINE_ASIC
 
 REDAS_CONFIGS: Tuple[Tuple[int, int], ...] = (
     (128, 128), (64, 256), (32, 384), (16, 448))

@@ -24,9 +24,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+from repro.core.scheduler import ExecutionPlan, Phase, plan_gemm, Tile
+from repro.core.slab import SISA_128, SlabArrayConfig
 from repro.hw.specs import AsicSpec, SISA_ASIC
-from repro.core.scheduler import ExecutionPlan, Phase, Tile, plan_gemm
-from repro.core.slab import ExecMode, SlabArrayConfig, SISA_128, MONOLITHIC_128
 
 
 @dataclasses.dataclass

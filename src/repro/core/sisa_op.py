@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.core.scheduler import ExecutionPlan, plan_gemm
 from repro.core.slab import SISA_128, SlabArrayConfig
+from repro.kernels.ops import sisa_einsum_2d, sisa_matmul
 from repro.kernels.sisa_gemm import BlockConfig, choose_block_config
-from repro.kernels.ops import sisa_matmul, sisa_einsum_2d
 
 
 @dataclasses.dataclass(frozen=True)

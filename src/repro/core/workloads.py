@@ -36,7 +36,7 @@ class LLMWorkload:
     layers: Tuple[GemmLayer, ...]
 
     def gemms(self, m: int) -> List[Tuple[int, int, int, int]]:
-        return [l.with_m(m) for l in self.layers]
+        return [ly.with_m(m) for ly in self.layers]
 
 
 def _llm(name: str, n_layers: int, d: int, kv: int, ff: int, vocab: int,

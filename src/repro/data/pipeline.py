@@ -9,7 +9,7 @@ embedding gathers see realistic skew rather than uniform traffic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -1,8 +1,8 @@
-from repro.distributed.sharding import (MeshSharder, batch_specs,
-                                         mesh_axes_for, opt_state_specs,
-                                         param_specs, to_named)
-from repro.distributed.fault import StragglerWatchdog, plan_elastic_mesh
 from repro.distributed.compression import compress_grads, init_error_state
+from repro.distributed.fault import plan_elastic_mesh, StragglerWatchdog
+from repro.distributed.sharding import (batch_specs, mesh_axes_for,
+                                        MeshSharder, opt_state_specs,
+                                        param_specs, to_named)
 
 __all__ = ["MeshSharder", "batch_specs", "mesh_axes_for", "opt_state_specs",
            "param_specs", "to_named", "StragglerWatchdog",

@@ -11,10 +11,7 @@ on CPU by shrinking a fake device set.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass

@@ -20,7 +20,6 @@ import re
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import Sharder

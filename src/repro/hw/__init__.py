@@ -1,3 +1,4 @@
-from repro.hw.specs import TPU_V5E, SISA_ASIC, TPU_BASELINE_ASIC, ChipSpec, AsicSpec
+from repro.hw.specs import (AsicSpec, ChipSpec, SISA_ASIC, TPU_BASELINE_ASIC,
+                            TPU_V5E)
 
 __all__ = ["TPU_V5E", "SISA_ASIC", "TPU_BASELINE_ASIC", "ChipSpec", "AsicSpec"]

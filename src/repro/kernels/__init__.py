@@ -5,10 +5,15 @@
 * ``moe_gemm`` — grouped per-expert GEMM used by the MoE layers.
 * ``ops`` — padded/differentiable wrappers; ``ref`` — pure-jnp oracles.
 """
+from repro.kernels.grouped_gemm import (flat_block_rows, flat_group_offsets,
+                                        flat_ragged_gemm, packed_decode_matmul,
+                                        ragged_grouped_gemm,
+                                        segment_grouped_gemm)
+from repro.kernels.ops import set_default_backend, sisa_einsum_2d, sisa_matmul
 from repro.kernels.sisa_gemm import BlockConfig, choose_block_config, sisa_gemm
-from repro.kernels.ops import sisa_matmul, sisa_einsum_2d, set_default_backend
-from repro.kernels.grouped_gemm import packed_decode_matmul, ragged_grouped_gemm
 
 __all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
            "sisa_matmul", "sisa_einsum_2d", "set_default_backend",
-           "packed_decode_matmul", "ragged_grouped_gemm"]
+           "packed_decode_matmul", "ragged_grouped_gemm",
+           "flat_ragged_gemm", "segment_grouped_gemm",
+           "flat_block_rows", "flat_group_offsets"]

@@ -10,9 +10,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 from repro.compat import CompilerParams
 from repro.kernels.sisa_gemm import choose_block_config

@@ -21,8 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sisa_gemm import (BlockConfig, choose_block_config,
-                                     sisa_gemm)
+from repro.kernels.sisa_gemm import choose_block_config, sisa_gemm
 
 _DEFAULT_BACKEND = "xla"
 

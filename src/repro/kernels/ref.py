@@ -26,3 +26,28 @@ def ragged_grouped_gemm_ref(x: jnp.ndarray, w: jnp.ndarray,
     acc = jnp.einsum("ecd,edf->ecf", jnp.where(mask, x, 0), w,
                      preferred_element_type=jnp.float32)
     return jnp.where(mask, acc, 0).astype(x.dtype)
+
+
+def segment_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, seg_starts: jnp.ndarray,
+                     seg_sizes: jnp.ndarray,
+                     seg_gids: jnp.ndarray) -> jnp.ndarray:
+    """Segment grouped GEMM oracle: row r of (M, d) x contracts against
+    w[gid] of its covering segment; rows outside every segment are zero."""
+    m = x.shape[0]
+    rows = jnp.arange(m)
+    s = jnp.clip(jnp.searchsorted(seg_starts, rows, side="right") - 1,
+                 0, seg_starts.shape[0] - 1)
+    valid = (rows >= seg_starts[s]) & (rows < seg_starts[s] + seg_sizes[s])
+    acc = jnp.einsum("md,mdf->mf", jnp.where(valid[:, None], x, 0),
+                     w[seg_gids[s]], preferred_element_type=jnp.float32)
+    return jnp.where(valid[:, None], acc, 0).astype(x.dtype)
+
+
+def flat_ragged_gemm_ref(x: jnp.ndarray, w: jnp.ndarray,
+                         group_sizes: jnp.ndarray,
+                         group_starts: jnp.ndarray) -> jnp.ndarray:
+    """Flat-prefix-layout oracle: group g's rows at
+    [starts[g], starts[g] + sizes[g]) contract against w[g]."""
+    g = w.shape[0]
+    return segment_gemm_ref(x, w, group_starts[:g], group_sizes,
+                            jnp.arange(g))

@@ -23,12 +23,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 from repro.compat import CompilerParams
 

@@ -9,27 +9,23 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
-from repro.analysis.roofline import (build_report, model_flops_for,
-                                     save_report)
+from repro.analysis.roofline import build_report, model_flops_for
 from repro.compat import cost_analysis as compat_cost_analysis
-from repro.configs import (ASSIGNED_ARCHS, SHAPE_CELLS, cell_applicable,
-                           get_config, smoke_config)
+from repro.configs import (ASSIGNED_ARCHS, cell_applicable, get_config,
+                           SHAPE_CELLS, smoke_config)
 from repro.distributed.sharding import (batch_specs, opt_state_specs,
                                         param_specs, to_named)
 from repro.launch import inputs as inp
 from repro.launch.mesh import make_production_mesh
-from repro.optim import adamw
-from repro.serve.serve_step import cache_specs, make_decode_step, \
-    make_prefill_step
+from repro.serve.serve_step import (cache_specs, make_decode_step,
+                                    make_prefill_step)
 from repro.train.train_step import make_train_step
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

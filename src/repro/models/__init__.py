@@ -1,7 +1,7 @@
 """Model zoo: one configurable transformer substrate, ten architectures."""
+from repro.models.common import IDENTITY_SHARDER, Sharder
 from repro.models.transformer import (forward_decode, forward_prefill,
                                       forward_train, init_cache, init_params)
-from repro.models.common import Sharder, IDENTITY_SHARDER
 
 __all__ = ["forward_train", "forward_prefill", "forward_decode",
            "init_cache", "init_params", "Sharder", "IDENTITY_SHARDER"]

@@ -14,8 +14,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (Array, IDENTITY_SHARDER, Sharder,
-                                 apply_rope, linear_apply, linear_init)
+from repro.models.common import (apply_rope, Array, IDENTITY_SHARDER,
+                                 linear_apply, linear_init, Sharder)
 
 NEG_INF = jnp.finfo(jnp.float32).min
 
@@ -131,7 +131,7 @@ def _chunked_causal_attn(q: Array, k: Array, v: Array, *, causal: bool,
         qf = qblk.astype(jnp.float32) * scale
 
         def kv_block(carry, kinp):
-            m, l, acc = carry
+            m, den, acc = carry
             kj, kb, vb = kinp
             logits = jnp.einsum("bqhd,bkhd->bhqk", qf,
                                 kb.astype(jnp.float32))
@@ -145,17 +145,17 @@ def _chunked_causal_attn(q: Array, k: Array, v: Array, *, causal: bool,
             new_m = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
             p = jnp.exp(logits - new_m)
             corr = jnp.exp(m - new_m)
-            l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            den = den * corr + jnp.sum(p, axis=-1, keepdims=True)
             acc = acc * corr[..., 0][..., None] + jnp.einsum(
                 "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
-            return (new_m, l, acc), None
+            return (new_m, den, acc), None
 
         m0 = jnp.full((b, h, chunk, 1), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((b, h, chunk, 1), jnp.float32)
+        den0 = jnp.zeros((b, h, chunk, 1), jnp.float32)
         a0 = jnp.zeros((b, h, chunk, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            kv_block, (m0, l0, a0), (jnp.arange(nc), kc, vc))
-        out = acc / jnp.maximum(l, 1e-30)
+        (m, den, acc), _ = jax.lax.scan(
+            kv_block, (m0, den0, a0), (jnp.arange(nc), kc, vc))
+        out = acc / jnp.maximum(den, 1e-30)
         return None, jnp.moveaxis(out, 1, 2)        # (b, chunk, h, hd)
 
     _, outs = jax.lax.scan(q_block, None, (jnp.arange(nc), qc))

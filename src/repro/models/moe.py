@@ -13,7 +13,6 @@ on TPU it lowers through ``repro.kernels.moe_gemm`` tiles.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -22,7 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
-from repro.models.common import Array, activation, dense_init
+from repro.models.common import activation, Array, dense_init
 
 
 def moe_init(key, cfg, dtype):
@@ -72,21 +71,39 @@ def _moe_local(x: Array, p, cfg, act: str, e_offset: int, e_local: int,
     le = jnp.clip(flat_e - e_offset, 0, e_local - 1)
     lp = jnp.clip(pos, 0, cap - 1)
 
-    # Dispatch: (E_loc, cap, d) buffer; masked pairs contribute zeros.
-    vals = jnp.where(is_local[:, None], xt[tok_of], 0).astype(x.dtype)
-    buf = jnp.zeros((e_local, cap, d), x.dtype).at[le, lp].add(vals)
-
-    # Ragged per-expert row counts: rows of ``buf`` are a dense prefix of
-    # length min(#routed, cap) — exactly what the grouped kernel skips
-    # past (the multi-tenant scale-in case).
-    counts = jnp.sum(onehot, axis=0)[e_offset:e_offset + e_local]
+    # Ragged per-expert row counts: min(#routed, cap) rows per expert.
+    # (dynamic_slice: e_offset is a traced axis_index under shard_map.)
+    counts = jax.lax.dynamic_slice_in_dim(jnp.sum(onehot, axis=0),
+                                          e_offset, e_local)
     sizes = jnp.minimum(counts, cap)
+    vals = jnp.where(is_local[:, None], xt[tok_of], 0).astype(x.dtype)
 
-    # Expert FFN (grouped GEMM — the SISA skew case).
-    out_e = _expert_ffn(buf, p, act, sizes=sizes)
-
-    # Combine: gather each pair's expert output, weight, sum over k.
-    pair_out = out_e[le, lp] * (is_local * flat_w)[:, None].astype(x.dtype)
+    if EXPERT_BACKEND["impl"] != "xla":
+        # Flat megablocks-style dispatch: one (sum(M̃ᵢ), d) buffer with
+        # block-aligned *cumulative* offsets — no (E_loc, cap) capacity
+        # padding is materialized; alignment waste is < one row block per
+        # expert and tiles past an expert's extent skip the MXU.
+        from repro.kernels.grouped_gemm import (flat_block_rows,
+                                                flat_group_offsets)
+        ff = p["up"].shape[-1]
+        m_hint = min(cap, 64)
+        bm = flat_block_rows(m_hint, ff, d, x.dtype)
+        offs = flat_group_offsets(sizes, bm)          # (E_loc + 1,)
+        m_flat = e_local * (-(-cap // bm)) * bm       # static upper bound
+        dst = offs[le] + lp
+        flat = jnp.zeros((m_flat, d), x.dtype).at[dst].add(vals)
+        segments = (offs[:-1], sizes,
+                    jnp.arange(e_local, dtype=jnp.int32), bm, m_hint)
+        out_flat = _expert_ffn(flat, p, act, segments=segments)
+        pair_out = out_flat[dst] \
+            * (is_local * flat_w)[:, None].astype(x.dtype)
+    else:
+        # Dense path: (E_loc, cap, d) buffer, capacity-padded einsum
+        # (composes with GSPMD; masked pairs contribute zeros).
+        buf = jnp.zeros((e_local, cap, d), x.dtype).at[le, lp].add(vals)
+        out_e = _expert_ffn(buf, p, act, sizes=sizes)
+        pair_out = out_e[le, lp] \
+            * (is_local * flat_w)[:, None].astype(x.dtype)
     y = jnp.sum(pair_out.reshape(n, moe_cfg.top_k, d), axis=1)
     if model_axis is not None:
         y = jax.lax.psum(y, model_axis)
@@ -111,10 +128,14 @@ def set_ep_impl(impl: str) -> None:
 
 
 # "xla": dense einsum over the capacity-padded buffer (default; composes
-#        with GSPMD).  "pallas"/"pallas_interpret": the ragged grouped
-#        kernel (repro.kernels.grouped_gemm) with per-expert row counts —
-#        row blocks past an expert's real batch skip the MXU, the
-#        kernel-side analogue of giving idle slabs to other tenants.
+#        with GSPMD).  "pallas"/"pallas_interpret": the *flat* grouped
+#        kernel (repro.kernels.grouped_gemm) — tokens are dispatched into
+#        one (sum(M̃ᵢ), d) buffer at block-aligned cumulative offsets and
+#        both EP impls ("psum" prefix groups, "all_to_all" per-rank
+#        segments) lower through it; row tiles past an expert's real
+#        batch skip the MXU, the kernel-side analogue of giving idle
+#        slabs to other tenants.  Differentiable (custom VJP), so the
+#        kernel path is trainable end-to-end.
 EXPERT_BACKEND = {"impl": "xla"}
 
 
@@ -123,31 +144,46 @@ def set_expert_backend(impl: str) -> None:
     EXPERT_BACKEND["impl"] = impl
 
 
-def _grouped(x_ecd: Array, w_edf: Array, sizes) -> Array:
-    """Per-expert contraction, ragged-aware when a kernel backend is on."""
+def _grouped(x: Array, w_edf: Array, sizes, segments=None) -> Array:
+    """Per-expert contraction, ragged-aware when a kernel backend is on.
+
+    ``segments`` = ``(starts, sizes, gids, block_rows, m_hint)`` selects
+    the flat layout: ``x`` is ``(M, d)`` and each row segment contracts
+    against its expert's weight through the flat SISA kernel.  Otherwise
+    ``x`` is the dense ``(E_loc, C, d)`` buffer.
+    """
     impl = EXPERT_BACKEND["impl"]
+    if segments is not None:
+        from repro.kernels.grouped_gemm import segment_grouped_gemm
+        starts, seg_sizes, gids, bm, m_hint = segments
+        return segment_grouped_gemm(
+            x, w_edf.astype(x.dtype), starts, seg_sizes, gids,
+            block_rows=bm, m_hint=m_hint,
+            interpret=(impl == "pallas_interpret")).astype(jnp.float32)
     if impl != "xla" and sizes is not None:
         from repro.kernels.grouped_gemm import ragged_grouped_gemm
         return ragged_grouped_gemm(
-            x_ecd, w_edf.astype(x_ecd.dtype), sizes,
+            x, w_edf.astype(x.dtype), sizes,
             interpret=(impl == "pallas_interpret")).astype(jnp.float32)
-    return jnp.einsum("ecd,edf->ecf", x_ecd, w_edf,
+    return jnp.einsum("ecd,edf->ecf", x, w_edf,
                       preferred_element_type=jnp.float32)
 
 
-def _expert_ffn(buf: Array, p, act: str, sizes=None) -> Array:
-    """(E_loc, C, d) -> (E_loc, C, d) through the local experts.
+def _expert_ffn(buf: Array, p, act: str, sizes=None, segments=None) -> Array:
+    """Local-expert FFN over either layout.
 
-    ``sizes`` (E_loc,) are the real per-expert batch sizes when rows form
-    a dense prefix (the psum dispatch path); ``None`` means dense.
+    Dense: ``(E_loc, C, d) -> (E_loc, C, d)`` with optional ``sizes``
+    (E_loc,) when rows form a dense prefix.  Flat: ``(M, d) -> (M, d)``
+    with ``segments`` metadata (see :func:`_grouped`).
     """
-    h = _grouped(buf, p["up"], sizes)
+    h = _grouped(buf, p["up"], sizes, segments)
     if "gate" in p:
-        g = _grouped(buf, p["gate"], sizes)
+        g = _grouped(buf, p["gate"], sizes, segments)
         h = activation(act)(g) * h
     else:
         h = activation(act)(h)
-    return _grouped(h.astype(buf.dtype), p["down"], sizes).astype(buf.dtype)
+    return _grouped(h.astype(buf.dtype), p["down"], sizes,
+                    segments).astype(buf.dtype)
 
 
 def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
@@ -178,7 +214,26 @@ def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
     # exchange: (E, C, d) -> (E/ms, ms*C, d): every rank keeps its experts
     buf = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=1,
                              tiled=True)
-    out = _expert_ffn(buf, p, act)
+    if EXPERT_BACKEND["impl"] != "xla":
+        # Post-exchange rows are *non-prefix* segments: local expert j
+        # holds one dense prefix per source rank inside [r*cap, (r+1)*cap).
+        # Exchange the per-expert row counts alongside the tokens and
+        # lower through the segment-offset flat kernel.
+        from repro.kernels.grouped_gemm import a2a_segments, aligned_block_rows
+        e_local = e // ms
+        sizes = jnp.minimum(jnp.sum(onehot, axis=0), cap)     # (E,)
+        recv = jax.lax.all_to_all(sizes.reshape(ms, e_local), model_axis,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        m_hint = min(cap, 64)
+        # segment starts are cap-strided: bm must divide the capacity
+        bm = aligned_block_rows(m_hint, p["up"].shape[-1], d, x.dtype,
+                                align_to=cap)
+        starts, seg_sizes, gids = a2a_segments(e_local, ms, cap, recv)
+        segments = (starts, seg_sizes, gids, bm, m_hint)
+        out = _expert_ffn(buf.reshape(e_local * ms * cap, d), p, act,
+                          segments=segments).reshape(e_local, ms * cap, d)
+    else:
+        out = _expert_ffn(buf, p, act)
     out = jax.lax.all_to_all(out, model_axis, split_axis=1, concat_axis=0,
                              tiled=True)                     # back to (E,C,d)
 

@@ -24,8 +24,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (Array, IDENTITY_SHARDER, Sharder,
-                                 dense_init, linear_apply, linear_init)
+from repro.models.common import (Array, IDENTITY_SHARDER, linear_apply,
+                                 linear_init, Sharder)
 
 _C = 8.0      # Griffin's recurrence sharpness constant
 _CONV_W = 4   # temporal conv width

@@ -22,14 +22,13 @@ CHUNK x 1.4 = 44.8 < log(f32max) ~ 88).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (Array, IDENTITY_SHARDER, Sharder,
-                                 linear_apply, linear_init)
+from repro.models.common import (Array, IDENTITY_SHARDER, linear_apply,
+                                 linear_init, Sharder)
 
 CHUNK = 32
 _MAX_DECAY = 1.4      # |log w| bound, see module docstring

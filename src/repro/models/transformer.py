@@ -11,23 +11,20 @@ the config's cyclic layer pattern) so the lowered HLO stays compact for
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN, BIDIR, LOCAL, RGLRU, WKV, ModelConfig
+from repro.configs.base import ATTN, BIDIR, LOCAL, ModelConfig, RGLRU, WKV
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import rwkv6 as rwkv_mod
-from repro.models.common import (Array, IDENTITY_SHARDER, Sharder,
-                                 embedding_init, embedding_lookup,
-                                 linear_init, linear_apply, lm_head_logits,
-                                 mlp_apply, mlp_init, rmsnorm_apply,
-                                 rmsnorm_init)
+from repro.models.common import (Array, embedding_init, embedding_lookup,
+                                 IDENTITY_SHARDER, linear_apply, linear_init,
+                                 lm_head_logits, mlp_apply, mlp_init,
+                                 rmsnorm_apply, rmsnorm_init, Sharder)
 
 PyTree = Any
 

@@ -7,7 +7,7 @@ leaf-for-leaf to the state (repro.distributed.sharding).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,8 @@ class AdamWState(NamedTuple):
 
 
 def init_state(params: PyTree) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       mu=jax.tree.map(zeros, params),
                       nu=jax.tree.map(zeros, params))
@@ -51,8 +52,8 @@ def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def global_norm(tree: PyTree) -> jax.Array:
-    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
-              for l in jax.tree.leaves(tree)]
+    leaves = [jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+              for leaf in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 

@@ -1,6 +1,6 @@
+from repro.serve.engine import choose_decode_batch, Request, ServeEngine
 from repro.serve.serve_step import (cache_specs, make_decode_step,
                                     make_prefill_step)
-from repro.serve.engine import Request, ServeEngine, choose_decode_batch
 
 __all__ = ["cache_specs", "make_decode_step", "make_prefill_step",
            "Request", "ServeEngine", "choose_decode_batch"]

@@ -13,18 +13,18 @@ same policy feeds the slab scheduler.
 """
 from __future__ import annotations
 
+from collections import deque
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (GemmRequest, SISA_128, packed_speedup,
-                        requests_from_workload, simulate_workload)
+from repro.core import (GemmRequest, packed_speedup, requests_from_workload,
+                        simulate_workload, SISA_128)
 from repro.core.workloads import GemmLayer, LLMWorkload
 
 SLAB_LADDER = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -116,11 +116,19 @@ class ServeEngine:
         self.max_seq = max_seq
         self.multi_tenant = multi_tenant
         self.queue: Deque[Request] = deque()
+        from repro.models.moe import EXPERT_BACKEND
         self.stats: Dict[str, Any] = {"batches": [], "ttft": [],
                                       "decode_steps": 0,
                                       "packed_speedup": [],
-                                      "packed_prefills": 0}
+                                      "packed_prefills": 0,
+                                      "expert_backend": expert_backend
+                                      or EXPERT_BACKEND["impl"]}
         if expert_backend is not None:
+            # MoE expert FFNs lower through the flat ragged grouped
+            # kernel (repro.kernels.grouped_gemm) for both EP impls:
+            # "psum" dispatches prefix groups at block-aligned cumulative
+            # offsets, "all_to_all" per-rank segment offsets — no
+            # (E, C, d) capacity buffer is materialized on the hot path.
             from repro.models.moe import set_expert_backend
             set_expert_backend(expert_backend)
 

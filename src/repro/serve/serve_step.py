@@ -8,13 +8,12 @@ giving every slab a slice of the cache (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import MeshSharder, mesh_axes_for
+from repro.distributed.sharding import mesh_axes_for, MeshSharder
 from repro.models import forward_decode, forward_prefill
 from repro.models.common import IDENTITY_SHARDER
 

@@ -8,14 +8,13 @@ pairs; the pod axis composes hierarchically.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import MeshSharder, mesh_axes_for
+from repro.distributed.sharding import mesh_axes_for, MeshSharder
 from repro.models import forward_train
 from repro.models.common import IDENTITY_SHARDER
 from repro.optim import adamw
@@ -35,7 +34,20 @@ def make_train_step(cfg: ModelConfig, mesh=None, *,
                     opt_cfg: Optional[adamw.AdamWConfig] = None,
                     accum_steps: int = 1, remat: str = "full",
                     grad_compression: Optional[str] = None,
-                    shard_grads: bool = False):
+                    shard_grads: bool = False,
+                    expert_backend: Optional[str] = None):
+    """Build the jittable train step.
+
+    ``expert_backend`` selects the MoE expert GEMM substrate
+    (process-global, like the serving engine's knob): ``"pallas"`` /
+    ``"pallas_interpret"`` lower the expert FFNs through the flat ragged
+    grouped kernel, whose custom VJP makes the whole step differentiable
+    — the backward pass reuses the same kernel for dX and a segment-sum
+    kernel for dW.  ``None`` leaves the current backend untouched.
+    """
+    if expert_backend is not None:
+        from repro.models.moe import set_expert_backend
+        set_expert_backend(expert_backend)
     opt_cfg = opt_cfg or adamw.AdamWConfig()
     sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
     batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()

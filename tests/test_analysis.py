@@ -1,7 +1,6 @@
 """HLO cost-walker + roofline tests."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo_cost import analyze, split_computations
@@ -47,7 +46,8 @@ def test_walker_scan_multiplies_by_trip_count():
 def test_walker_nested_scans():
     def nested(x):
         def outer(c, _):
-            inner = lambda c2, _: (c2 @ c2, None)
+            def inner(c2, _):
+                return c2 @ c2, None
             c2, _ = jax.lax.scan(inner, c, None, length=5)
             return c2, None
         y, _ = jax.lax.scan(outer, x, None, length=4)

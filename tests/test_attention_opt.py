@@ -1,7 +1,5 @@
 """Optimized attention paths must be EXACT (banded/chunked) or tightly
 bounded (int8 KV) against the naive reference."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +16,8 @@ RNG = np.random.default_rng(0)
 
 
 def _qkv(b, s, h, hd):
-    mk = lambda: jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    def mk():
+        return jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
     return mk(), mk(), mk()
 
 

@@ -1,11 +1,9 @@
 """Unit + property tests for the SISA §3.2 scheduler."""
-import math
-
-import pytest
 from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import (ExecMode, SISA_128, MONOLITHIC_128, SlabArrayConfig,
-                        plan_gemm)
+from repro.core import (ExecMode, MONOLITHIC_128, plan_gemm, SISA_128,
+                        SlabArrayConfig)
 
 
 class TestModeSelection:

@@ -1,10 +1,10 @@
 """Simulator tests: paper-claim regression + invariants."""
-import pytest
 from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import (TABLE2, SISA_128, MONOLITHIC_128, simulate_gemm,
-                        simulate_workload, simulate_workload_redas,
-                        area_overhead_vs_tpu)
+from repro.core import (area_overhead_vs_tpu, MONOLITHIC_128, simulate_gemm,
+                        simulate_workload, simulate_workload_redas, SISA_128,
+                        TABLE2)
 from repro.hw.specs import SISA_ASIC, TPU_BASELINE_ASIC
 
 

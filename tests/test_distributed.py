@@ -8,12 +8,11 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
+import pytest
 
-from repro.configs import get_config, smoke_config
-from repro.distributed.sharding import (MeshAxes, _fit, _spec, param_specs,
-                                        mesh_axes_for)
+from repro.configs import get_config
+from repro.distributed.sharding import _fit, _spec, param_specs
 from repro.launch import inputs as inp
 
 

@@ -1,12 +1,12 @@
 """Pallas kernel validation: shape/dtype sweeps vs the jnp oracle
 (interpret=True executes the kernel body on CPU)."""
+from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels import BlockConfig, choose_block_config, sisa_matmul
+from repro.kernels import choose_block_config, sisa_matmul
 from repro.kernels.moe_gemm import moe_grouped_gemm
 from repro.kernels.ops import _pallas_matmul
 from repro.kernels.ref import gemm_ref, grouped_gemm_ref

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
-from repro.configs.base import SHAPE_CELLS, cell_applicable
+from repro.configs.base import cell_applicable, SHAPE_CELLS
 from repro.models import (forward_decode, forward_prefill, forward_train,
                           init_cache, init_params)
 from repro.models.common import padded_vocab
@@ -54,8 +54,8 @@ def test_forward_and_train_step(arch):
     assert loss.shape == ()
     # gradient sanity: finite, nonzero somewhere
     leaves = jax.tree.leaves(grads)
-    assert all(jnp.all(jnp.isfinite(l)) for l in leaves), arch
-    total = sum(float(jnp.sum(jnp.abs(l))) for l in leaves)
+    assert all(jnp.all(jnp.isfinite(leaf)) for leaf in leaves), arch
+    total = sum(float(jnp.sum(jnp.abs(leaf))) for leaf in leaves)
     assert total > 0, arch
 
 
@@ -96,7 +96,7 @@ def test_prefill_decode_consistency(arch):
     if cfg.frontend is not None:
         return  # mixed-modality continuation has no full-seq reference
     # full forward reference over S+1 tokens, compare logits at position S
-    from repro.models.transformer import _embed_inputs, _run_groups, _logits
+    from repro.models.transformer import _embed_inputs, _logits, _run_groups
     from repro.models.common import rmsnorm_apply
     x = _embed_inputs(params, cfg, batch_full)
     x, _ = _run_groups(params["groups"], x, cfg.layer_groups(), cfg,

@@ -1,8 +1,8 @@
 """Multi-tenant slab scheduler (repro.core.multi) + grouped kernel tests."""
+from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import SISA_128, SlabArrayConfig
 from repro.core.multi import (GemmRequest, pack_requests, packed_speedup,

@@ -1,13 +1,11 @@
 """Pipeline-parallel module: schedule model + degenerate 1-stage path +
 multi-stage numerical check (runs in the 512-device dry-run subprocess;
 here we exercise the 1-device degenerate mesh and the schedule math)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.distributed.pipeline import (pipeline_apply,
-                                        schedule_bubble_fraction)
+from repro.distributed.pipeline import pipeline_apply, schedule_bubble_fraction
 from repro.launch.mesh import make_host_mesh
 
 

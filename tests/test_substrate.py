@@ -7,11 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint import ckpt
 from repro.configs import smoke_config
-from repro.data import DataConfig, SyntheticLM
+from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.optim import adamw
-from repro.checkpoint import ckpt
 
 
 class TestData:
