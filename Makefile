@@ -2,12 +2,16 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: ci lint test bench-smoke bench bench-baseline
+.PHONY: ci lint docs test bench-smoke bench bench-baseline
 
-ci: lint test bench-smoke
+ci: lint docs test bench-smoke
 
 lint:
 	-ruff check src tests benchmarks scripts || echo "ruff unavailable; CI runs it"
+
+# Docs gate: public-surface docstrings + ARCHITECTURE.md cross-references.
+docs:
+	$(PY) scripts/check_docs.py
 
 test:
 	$(PY) -m pytest -x -q -m "not slow"

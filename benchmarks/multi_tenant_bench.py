@@ -1,4 +1,4 @@
-"""Multi-tenant slab packing vs serial per-GEMM scheduling.
+"""Multi-tenant slab packing: simulated speedup AND measured co-execution.
 
 The paper's §3.2 planner handles one GEMM at a time — whenever a GEMM's
 M extent or N-tile count leaves slab groups idle, they sit power-gated
@@ -16,17 +16,39 @@ traffic shapes that dominate LLM serving:
   grouped-kernel scenario).
 * ``mixed_serving``  — a decode batch co-scheduled with waiting prefill
   chunks (heterogeneous m: 4..150).
+
+The ``coexec_*`` rows are **measured, not simulated**: the same
+placement is executed by ``repro.kernels.coexec`` — every tenant's tile
+tasks in one fused Pallas grid, ordered by the packer's schedule — and
+timed against the serial baseline (the same kernel launched once per
+tenant, back-to-back, with identical block shapes).  The reported ratio
+is serial wall-clock / fused wall-clock for the whole placement.
+
+Caveat (labelled ``interpret`` in the rows): on this CPU CI substrate
+both sides run under ``interpret=True``, where per-launch
+trace/dispatch cost dominates — so the ratio chiefly measures how the
+fused grid amortizes T launches into one, which grows with tenant
+count; it is *not* a TPU hardware co-execution number.  The
+slab-overlap win on real hardware is what ``multi_tenant_*`` simulated
+rows model; compiled-TPU measurement of the fused grid is a ROADMAP
+item.
 """
 from __future__ import annotations
 
 import time
 from typing import List, Tuple
 
-from benchmarks.common import Row, write_csv
-from repro.core import packed_speedup, SISA_128
-from repro.core.multi import GemmRequest
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit, write_csv
+from repro.core import coexec_tile_sequence, packed_speedup, SISA_128
+from repro.core.multi import GemmRequest, pack_requests
 from repro.core.workloads import TABLE2
 from repro.hw.specs import SISA_ASIC
+from repro.kernels.coexec import (build_coexec_plan, CoexecTenant,
+                                  pack_operands, run_plan,
+                                  single_tenant_plans)
 
 
 def _mk_requests(specs: List[Tuple[int, int, int]]) -> List[GemmRequest]:
@@ -62,6 +84,74 @@ def _scenarios(quick: bool):
     return scen
 
 
+def _measured_scenarios(quick: bool):
+    """(m, k, n) tenant sets for the *executed* co-exec comparison.
+
+    Each tenant carries its own weight (per-request adapters / distinct
+    experts), so the GEMMs cannot be concatenated — the fused grid is
+    the only way to run them in one launch.
+    """
+    if quick:
+        return {
+            "decode_batch": [(m, 128, 256) for m in (1, 4, 8, 2)],
+            "narrow_proj": [(8, 256, 128)] * 4,
+        }
+    return {
+        "decode_batch": [(m, 896, 512)
+                         for m in (1, 4, 8, 16, 2, 12, 6, 3)],
+        "narrow_proj": [(8, 896, 128)] * 16,
+    }
+
+
+def bench_coexec_measured(quick: bool = False) -> List[Row]:
+    """Execute each packed placement fused vs back-to-back and time it."""
+    out: List[Row] = []
+    csv_rows = []
+    rng = np.random.default_rng(0)
+    for name, shapes in _measured_scenarios(quick).items():
+        xs = [jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+              for (m, k, n) in shapes]
+        ws = [jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+              for (m, k, n) in shapes]
+        reqs = [GemmRequest(rid=i, m=m, n=n, k=k)
+                for i, (m, k, n) in enumerate(shapes)]
+        packed = pack_requests(reqs, SISA_128, SISA_ASIC)
+        order = coexec_tile_sequence(packed, rids=[r.rid for r in reqs])
+        tenants = [CoexecTenant(rid=i, m=m, n=n, k=k)
+                   for i, (m, k, n) in enumerate(shapes)]
+        # Plans AND packed operands are built once, outside the timed
+        # region, for BOTH sides — the timings compare launch structure
+        # (one fused grid vs T back-to-back grids), nothing else.
+        plan = build_coexec_plan(tenants, jnp.float32, order=order)
+        singles = single_tenant_plans(plan)
+        a_flat, b_stack = pack_operands(plan, xs, ws)
+        per_tenant = [pack_operands(sp, [x], [w])
+                      for sp, x, w in zip(singles, xs, ws)]
+
+        def fused():
+            run_plan(plan, a_flat, b_stack,
+                     interpret=True).block_until_ready()
+
+        def serial():
+            for sp, (a, b) in zip(singles, per_tenant):
+                run_plan(sp, a, b, interpret=True).block_until_ready()
+
+        us_fused = timeit(fused)
+        us_serial = timeit(serial)
+        ratio = us_serial / us_fused
+        csv_rows.append((name, len(shapes), plan.n_tasks,
+                         f"{us_serial:.0f}", f"{us_fused:.0f}",
+                         f"{ratio:.3f}"))
+        out.append((f"coexec_{name}", us_fused,
+                    f"measured {ratio:.2f}x vs serial (interpret; "
+                    f"{len(shapes)} tenants, {plan.n_tasks} fused grid "
+                    "tasks)"))
+    write_csv("coexec_measured",
+              ["scenario", "n_tenants", "n_tasks", "serial_us",
+               "fused_us", "measured_speedup"], csv_rows)
+    return out
+
+
 def bench_multi_tenant(quick: bool = False) -> List[Row]:
     out: List[Row] = []
     csv_rows = []
@@ -81,6 +171,7 @@ def bench_multi_tenant(quick: bool = False) -> List[Row]:
     write_csv("multi_tenant", ["scenario", "n_gemms", "serial_cycles",
                                "packed_cycles", "speedup", "chosen",
                                "avg_concurrency", "anygated_frac"], csv_rows)
+    out.extend(bench_coexec_measured(quick))
     return out
 
 

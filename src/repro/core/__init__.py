@@ -8,11 +8,16 @@ Public surface:
 * ``simulate_gemm_redas`` — the ReDas reconfigurable baseline.
 * ``sisa_matmul`` — the JAX op (Pallas-backed) that applies SISA's
   shape-adaptive tiling on TPU (see ``repro.core.sisa_op``).
+* ``pack_requests`` / ``coexec_tile_sequence`` — multi-tenant slab
+  packing and its lowering to the fused co-exec kernel's task order.
+* ``TABLE2`` — model name → ``LLMWorkload`` map of the paper's Table-2
+  evaluation set (Qwen2.5-0.5B/1.5B/7B, Llama3.2-3B).
 """
 from repro.core.energy import area_overhead_vs_tpu, area_report, edp_ratio
-from repro.core.multi import (GemmRequest, pack_requests, packed_speedup,
-                              PackedSchedule, requests_from_workload,
-                              simulate_serial, TileRun)
+from repro.core.multi import (coexec_tile_sequence, GemmRequest,
+                              pack_requests, packed_speedup, PackedSchedule,
+                              requests_from_workload, simulate_serial,
+                              TileRun)
 from repro.core.redas import simulate_gemm_redas, simulate_workload_redas
 from repro.core.scheduler import ExecutionPlan, Phase, plan_gemm, Tile
 from repro.core.simulator import (SimResult, simulate_gemm, simulate_workload,
@@ -27,6 +32,7 @@ __all__ = [
     "simulate_gemm_redas", "simulate_workload_redas",
     "GemmRequest", "PackedSchedule", "TileRun", "pack_requests",
     "packed_speedup", "requests_from_workload", "simulate_serial",
+    "coexec_tile_sequence",
     "area_report", "area_overhead_vs_tpu", "edp_ratio",
     "TABLE2", "LLMWorkload",
 ]

@@ -15,6 +15,8 @@ class AreaReport:
 
 
 def area_report(spec: AsicSpec = SISA_ASIC) -> AreaReport:
+    """Per-component area/static-power breakdown of the ASIC spec
+    (Table-3 reproduction): array, buffers, slab mux/gating overheads."""
     rows = {
         "SA 128x128": {"area_mm2": spec.sa_area_mm2,
                        "static_nj_per_cycle": spec.sa_static_nj},

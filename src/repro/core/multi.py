@@ -67,12 +67,18 @@ class GemmRequest:
 
 @dataclasses.dataclass(frozen=True)
 class TileRun:
-    """One tile task's residency: which slabs, when, for which request."""
+    """One tile task's residency: which slabs, when, for which request.
+
+    ``tile`` carries the output tile the run executes (``None`` only for
+    schedules built before PR 3); the co-exec lowering reads it to map
+    the simulated placement onto kernel grid tasks.
+    """
 
     rid: int
     slabs: Tuple[int, ...]          # contiguous physical slab ids
     start: float
     end: float
+    tile: Optional[Tile] = None
 
     @property
     def duration(self) -> float:
@@ -193,7 +199,8 @@ def _serial_schedule(requests: Sequence[GemmRequest], cfg: SlabArrayConfig,
         res = simulate_gemm(req.m, req.n, req.k, cfg, spec)
         per_request[req.rid] = res
         runs.append(TileRun(rid=req.rid, slabs=tuple(range(cfg.n_slabs)),
-                            start=t, end=t + res.cycles))
+                            start=t, end=t + res.cycles,
+                            tile=Tile(tm=req.m, tn=req.n, k=req.k)))
         spans[req.rid] = (t, t + res.cycles)
         t += res.cycles
         total += res
@@ -255,7 +262,8 @@ def pack_requests(requests: Sequence[GemmRequest],
                 q.popleft()
                 dur = tile_cycles(tile, need * cfg.slab_h)
                 free.difference_update(run)
-                runs.append(TileRun(rid=rid, slabs=run, start=t, end=t + dur))
+                runs.append(TileRun(rid=rid, slabs=run, start=t, end=t + dur,
+                                    tile=tile))
                 s0, s1 = spans.get(rid, (t, t + dur))
                 spans[rid] = (min(s0, t), max(s1, t + dur))
                 slab_h_cycles[rid] = slab_h_cycles.get(rid, 0.0) + dur * need
@@ -323,6 +331,31 @@ def packed_speedup(requests: Sequence[GemmRequest],
     packed = pack_requests(requests, cfg, spec, serial_schedule=serial)
     sp = serial.makespan / packed.makespan if packed.makespan else 1.0
     return sp, packed, serial.result
+
+
+def coexec_tile_sequence(schedule: PackedSchedule,
+                         rids: Optional[Sequence[int]] = None) -> List[int]:
+    """Tenant-index sequence of a schedule's tile runs, in placement order.
+
+    This is the tile table the co-exec kernel consumes: the packer's
+    ``ExecutionPlan``-derived ``tile_runs`` are walked by start time (the
+    event-driven placement order — co-resident tenants alternate), and
+    each run is mapped to the index of its request in ``rids`` (defaults
+    to first-appearance order).  Feed the result to
+    ``repro.kernels.coexec.coexec_matmul(order=...)`` /
+    ``build_coexec_plan(order=...)`` so the fused grid axis walks tile
+    tasks exactly as the simulator placed them on slab runs, instead of
+    tenant-by-tenant.
+    """
+    runs = sorted(schedule.tile_runs, key=lambda r: (r.start, r.slabs))
+    if rids is None:
+        seen: List[int] = []
+        for r in runs:
+            if r.rid not in seen:
+                seen.append(r.rid)
+        rids = seen
+    index = {rid: i for i, rid in enumerate(rids)}
+    return [index[r.rid] for r in runs if r.rid in index]
 
 
 def requests_from_workload(gemms: Iterable[Tuple[int, int, int, int]],

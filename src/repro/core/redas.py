@@ -63,6 +63,9 @@ def _ws_cycles(m: int, n: int, k: int, h: int, w: int) -> float:
 def simulate_gemm_redas(m: int, n: int, k: int,
                         spec: AsicSpec = TPU_BASELINE_ASIC,
                         dataflows: Sequence[str] = ("os",)) -> SimResult:
+    """ReDas baseline: best SimResult over its reconfigurable array
+    shapes (and optional dataflows) for one GEMM — the paper's §4
+    comparison point."""
     best: SimResult | None = None
     for h, w in REDAS_CONFIGS:
         if "os" in dataflows:
@@ -82,6 +85,8 @@ def simulate_gemm_redas(m: int, n: int, k: int,
 def simulate_workload_redas(gemms: List[tuple],
                             spec: AsicSpec = TPU_BASELINE_ASIC,
                             dataflows: Sequence[str] = ("os",)) -> SimResult:
+    """Sum :func:`simulate_gemm_redas` over ``(m, n, k, occurrences)``
+    workload tuples (Table-2-style GEMM mixes)."""
     total = SimResult()
     for (m, n, k, occ) in gemms:
         r = simulate_gemm_redas(m, n, k, spec, dataflows)

@@ -64,6 +64,9 @@ class Phase:
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
+    """A GEMM's full §3.2 schedule: the ordered phases (each one slab
+    configuration with its tile assignment) covering ``C[m,n]``."""
+
     m: int
     n: int
     k: int

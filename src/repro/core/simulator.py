@@ -91,6 +91,8 @@ class SimResult:
 
 
 def tile_cycles(t: Tile, group_h: int) -> int:
+    """OS-dataflow cycles for one output tile on a ``group_h``-tall group:
+    skew-in + skew-out + K reduction + drain through the group height."""
     return (t.tm - 1) + (t.tn - 1) + t.k + group_h
 
 
@@ -201,6 +203,9 @@ def simulate_gemm(m: int, n: int, k: int,
                   cfg: SlabArrayConfig = SISA_128,
                   spec: AsicSpec = SISA_ASIC,
                   plan: Optional[ExecutionPlan] = None) -> SimResult:
+    """Cycle/energy/DRAM model of one GEMM under the §3.2 plan (or a
+    caller-supplied ``plan``): per-phase tile cycles on the critical
+    group, plus dynamic + gated static energy and off-chip traffic."""
     plan = plan or plan_gemm(m, n, k, cfg, spec.global_buf_bytes, spec.elem_bytes)
     total = SimResult(n_pes=cfg.n_pes)
     for phase in plan.phases:

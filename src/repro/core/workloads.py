@@ -31,6 +31,9 @@ class GemmLayer:
 
 @dataclasses.dataclass(frozen=True)
 class LLMWorkload:
+    """A model's Table-2-style GEMM layer set; ``gemms(m)`` instantiates
+    it at effective batch/sequence extent ``m``."""
+
     name: str
     n_layers: int
     layers: Tuple[GemmLayer, ...]

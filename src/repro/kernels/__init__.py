@@ -2,9 +2,17 @@
 
 * ``sisa_gemm`` — SISA-scheduled output-stationary GEMM (the paper's
   contribution, adapted to MXU tiles; DESIGN.md §2b).
+* ``grouped_gemm`` — flat ragged grouped GEMM (MoE experts, grouped
+  decode) with a custom VJP; see its module docstring for the API.
+* ``coexec`` — fused multi-tenant co-execution: one grid runs the tile
+  tasks of many heterogeneous GEMMs, interleaved per the slab packer's
+  placement (``repro.core.multi``).
 * ``moe_gemm`` — grouped per-expert GEMM used by the MoE layers.
 * ``ops`` — padded/differentiable wrappers; ``ref`` — pure-jnp oracles.
 """
+from repro.kernels.coexec import (build_coexec_plan, coexec_matmul,
+                                  CoexecPlan, CoexecTenant,
+                                  sequential_matmul)
 from repro.kernels.grouped_gemm import (flat_block_rows, flat_group_offsets,
                                         flat_ragged_gemm, packed_decode_matmul,
                                         ragged_grouped_gemm,
@@ -16,4 +24,6 @@ __all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
            "sisa_matmul", "sisa_einsum_2d", "set_default_backend",
            "packed_decode_matmul", "ragged_grouped_gemm",
            "flat_ragged_gemm", "segment_grouped_gemm",
-           "flat_block_rows", "flat_group_offsets"]
+           "flat_block_rows", "flat_group_offsets",
+           "CoexecPlan", "CoexecTenant", "build_coexec_plan",
+           "coexec_matmul", "sequential_matmul"]

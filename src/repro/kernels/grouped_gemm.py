@@ -26,13 +26,52 @@ The old ``ragged_grouped_gemm(x: (G, C, d), ...)`` entry point survives
 as a thin shim that reshapes through the flat path (and is now
 differentiable as a side effect).
 
-Alignment contract: every segment start must be a multiple of the row
-block ``block_rows`` (use :func:`flat_group_offsets` /
-:func:`flat_block_rows` to build layouts), so each MXU row tile is owned
-by exactly one group and weight raggedness is handled by masking the
-tile's tail rows.  Rows covered by no segment produce zeros and are
-never MAC'd — the kernel-side power gating of slabs above
-``ceil(Mᵢ/slab_h)``.
+Public API
+----------
+``flat_ragged_gemm(x, w, group_sizes, group_offsets=None, ...)``
+    The grouped GEMM: ``x: (M, d)`` flat tokens against ``w: (G, d, f)``
+    where group ``g`` owns rows ``[offsets[g], offsets[g] + sizes[g])``.
+    ``group_offsets`` defaults to :func:`flat_group_offsets` (cumulative
+    block-aligned starts).  Differentiable (see *VJP semantics*).
+``segment_grouped_gemm(x, w, seg_starts, seg_sizes, seg_gids, ...)``
+    Generalization to arbitrary *segments*: segment ``s`` covers rows
+    ``[starts[s], starts[s] + sizes[s])`` and contracts against
+    ``w[gids[s]]``.  Starts must be ascending and gids non-decreasing;
+    several segments may share one gid (the ``EP_IMPL="all_to_all"``
+    post-exchange layout — :func:`a2a_segments` builds the table).
+``ragged_grouped_gemm(x, w, group_sizes, ...)``
+    Capacity-layout shim: ``x: (G, C, d) -> (G, C, f)``; reshapes
+    through the flat path.  New code should lay tokens out flat.
+``flat_block_rows`` / ``aligned_block_rows`` / ``flat_group_offsets``
+    Layout helpers: the row block the kernels will pick, the largest
+    row block dividing a fixed stride, and cumulative aligned offsets.
+``packed_decode_matmul(xs, w, ...)``
+    Shared-weight co-scheduled decode: concatenates the requests into
+    one tall GEMM.  For *per-tenant* weights use
+    ``repro.kernels.coexec`` instead.
+
+VJP semantics
+-------------
+The segment kernels carry a ``jax.custom_vjp``: dX = dY·Wᵀ reuses the
+*same* flat kernel (``w.swapaxes(1, 2)`` — identical M-skew, identical
+tile ownership), and dW[g] = X[rows g]ᵀ·dY[rows g] runs a dedicated
+segment-sum kernel whose accumulator initializes/drains at each group's
+first/last row tile.  Integer layout arguments (sizes, offsets,
+segments) get no cotangent; gradients match the dense reference to f32
+accumulation tolerance (see ``tests/test_grouped_flat.py``).  Groups
+with zero rows receive exactly-zero dW blocks.
+
+Alignment invariants
+--------------------
+* Every segment/group start must be a multiple of the row block
+  ``block_rows`` (build layouts with :func:`flat_group_offsets` /
+  :func:`aligned_block_rows`), so each MXU row tile is owned by exactly
+  one group; weight raggedness is masked at the tile's tail rows, never
+  split across owners.
+* ``seg_starts`` ascending, ``seg_gids`` non-decreasing — required by
+  the dW segment-sum's init/drain flags.
+* Rows covered by no segment produce zeros and are never MAC'd — the
+  kernel-side power gating of slabs above ``ceil(Mᵢ/slab_h)``.
 """
 from __future__ import annotations
 

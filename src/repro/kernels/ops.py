@@ -27,6 +27,9 @@ _DEFAULT_BACKEND = "xla"
 
 
 def set_default_backend(backend: str) -> None:
+    """Route ``sisa_matmul``/``sisa_einsum_2d`` through ``"xla"`` (dense
+    dot, GSPMD-friendly), ``"pallas"`` (TPU kernel), or
+    ``"pallas_interpret"`` (CPU validation of the kernel path)."""
     global _DEFAULT_BACKEND
     assert backend in ("xla", "pallas", "pallas_interpret")
     _DEFAULT_BACKEND = backend

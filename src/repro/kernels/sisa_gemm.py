@@ -36,6 +36,9 @@ LANE = 128
 
 @dataclasses.dataclass(frozen=True)
 class BlockConfig:
+    """MXU tile shape ``(bm, bn, bk)`` chosen by the §3.2 scheduler —
+    ``bm`` is the slab height, ``bk`` the resident K depth."""
+
     bm: int
     bn: int
     bk: int

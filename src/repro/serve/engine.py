@@ -8,6 +8,34 @@ simulator predicts a cycle win over running 16 + 3 deferred, so the
 accelerator always executes at a utilization knee.  Prefill requests are
 scheduled one-at-a-time (latency-sensitive, skewed-M — the slab case).
 
+Multi-tenant co-execution (``coexec_backend``): every step the packer
+(:func:`plan_step_packing`) co-schedules the quantized decode batch's
+GEMMs with the *waiting prompts'* prefill GEMMs on the slab groups the
+decode work leaves idle.  With ``coexec_backend`` set the engine
+executes that placement at the serving level instead of only predicting
+it: the co-scheduled prefills run inside the decode window (one per
+decode iteration), their caches park in the backfill queue, and the
+next step admits them decode-ready.  The flag does **not** re-route the
+jitted ``prefill_fn``/``decode_fn`` GEMMs through
+``repro.kernels.coexec`` — those are closed jitted functions; the
+GEMM-level fused grid is exercised with real operands by
+``benchmarks/multi_tenant_bench.py`` and ``tests/test_coexec.py``.  The
+engine does lower each step's placement to the fused kernel's grid-task
+order (``repro.core.multi.coexec_tile_sequence``) and records its size
+and tenant interleaving in ``stats["coexec_tiles"]`` /
+``stats["coexec_interleave"]``.  With the flag unset the sequential
+path is the fallback, and the two paths are numerics-equivalent:
+prefill/decode are deterministic and the step-level batch composition
+is identical, so every request generates the same tokens either way
+(regression-tested in ``tests/test_coexec.py``).
+
+Deferred-request accounting: a prefill that completed this step via
+backfill is *live* next step — it is admitted from the backfill queue
+(never re-prefilled) and it no longer appears in the next placement's
+waiting-prefill set.  Counting it again — as pre-PR-3 drafts of this
+loop did — double-books its GEMMs in the ladder quantization and the
+packed-speedup stats.
+
 On CPU this drives the real jitted decode step; on an ASIC deployment the
 same policy feeds the slab scheduler.
 """
@@ -16,15 +44,15 @@ from __future__ import annotations
 from collections import deque
 import dataclasses
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (GemmRequest, packed_speedup, requests_from_workload,
-                        simulate_workload, SISA_128)
+from repro.core import (coexec_tile_sequence, GemmRequest, packed_speedup,
+                        requests_from_workload, simulate_workload, SISA_128)
 from repro.core.workloads import GemmLayer, LLMWorkload
 
 SLAB_LADDER = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -106,7 +134,8 @@ class ServeEngine:
                  decode_fn: Callable, cache_init_fn: Callable,
                  max_batch: int = 8, max_seq: int = 256,
                  multi_tenant: bool = True,
-                 expert_backend: Optional[str] = None):
+                 expert_backend: Optional[str] = None,
+                 coexec_backend: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.prefill_fn = prefill_fn
@@ -115,12 +144,26 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.multi_tenant = multi_tenant
+        # Co-execution: execute (not just predict) each step's packed
+        # placement — deferred prefills ride the decode window and join
+        # the next batch decode-ready.  Requires multi_tenant.
+        if coexec_backend not in (None, "pallas", "pallas_interpret",
+                                  "xla"):
+            raise ValueError(f"unknown coexec_backend {coexec_backend!r}")
+        self.coexec_backend = coexec_backend
         self.queue: Deque[Request] = deque()
+        # (request, prefilled cache, position): prefills completed via
+        # backfill, awaiting decode admission.
+        self._backfilled: Deque[Tuple[Request, Any, int]] = deque()
         from repro.models.moe import EXPERT_BACKEND
         self.stats: Dict[str, Any] = {"batches": [], "ttft": [],
                                       "decode_steps": 0,
                                       "packed_speedup": [],
                                       "packed_prefills": 0,
+                                      "backfilled": 0,
+                                      "coexec_tiles": [],
+                                      "coexec_interleave": [],
+                                      "coexec_backend": coexec_backend,
                                       "expert_backend": expert_backend
                                       or EXPERT_BACKEND["impl"]}
         if expert_backend is not None:
@@ -146,20 +189,44 @@ class ServeEngine:
         self.stats["ttft"].append(req.first_token_at - req.arrived)
         return cache, s
 
+    def _backfill_one(self, req: Request) -> None:
+        """Execute one deferred prefill inside the current decode window
+        and park it decode-ready for the next admission."""
+        cache, pos = self._prefill_one(req)
+        self._backfilled.append((req, cache, pos))
+        self.stats["backfilled"] += 1
+
     def run(self, max_steps: int = 512) -> List[Request]:
         """Serve everything in the queue (greedy decoding)."""
         finished: List[Request] = []
-        while self.queue and max_steps > 0:
-            # Admission: SISA-aware batch size over live requests.
-            bsz = choose_decode_batch(len(self.queue), self.cfg,
-                                      self.max_batch)
-            bsz = max(1, min(bsz, len(self.queue), self.max_batch))
+        while (self.queue or self._backfilled) and max_steps > 0:
+            # Admission: SISA-aware batch size over live requests.  A
+            # backfilled request *is* live (its prefill already ran);
+            # counting it as a pending prefill again would double-book
+            # its GEMMs against this step's ladder quantization.
+            n_live = len(self.queue) + len(self._backfilled)
+            bsz = choose_decode_batch(n_live, self.cfg, self.max_batch)
+            bsz = max(1, min(bsz, n_live, self.max_batch))
             self.stats["batches"].append(bsz)
-            active = [self.queue.popleft() for _ in range(bsz)]
+            # Backfilled requests first (FIFO — they were at the queue
+            # front when backfilled, so batch composition matches the
+            # sequential path exactly), then fresh queue admits.
+            active: List[Request] = []
+            caches, positions = [], []
+            while self._backfilled and len(active) < bsz:
+                r, cache, pos_r = self._backfilled.popleft()
+                active.append(r)
+                caches.append(cache)
+                positions.append(pos_r)
+            fresh = [self.queue.popleft()
+                     for _ in range(bsz - len(active))]
+            active += fresh
+            n_pre = 0
             if self.multi_tenant:
-                # Predict the slab-level co-schedule of this step: decode
-                # GEMMs of the admitted batch packed with the waiting
-                # prompts' prefill GEMMs on idle slab groups.
+                # Co-schedule this step on the slab array: decode GEMMs
+                # of the admitted batch packed with the waiting prompts'
+                # prefill GEMMs on idle slab groups.  Already-backfilled
+                # prefills are excluded — their work is done.
                 waiting = [len(r.prompt) for r in self.queue]
                 packed, serial, n_pre = plan_step_packing(
                     bsz, waiting, self.cfg)
@@ -167,13 +234,27 @@ class ServeEngine:
                     self.stats["packed_speedup"].append(
                         serial.cycles / packed.makespan)
                 self.stats["packed_prefills"] += n_pre
-            # Prefill each (latency-sensitive, slab-mode skewed GEMMs),
-            # then batch the decode loop.
-            caches, positions = [], []
-            for r in active:
-                cache, pos = self._prefill_one(r)
+                if self.coexec_backend:
+                    # Lower the placement to the fused kernel's
+                    # grid-task order and record its co-residency:
+                    # adjacent-task tenant switches are the interleaving
+                    # the fused grid would execute for this step.
+                    seq = coexec_tile_sequence(packed)
+                    self.stats["coexec_tiles"].append(len(seq))
+                    self.stats["coexec_interleave"].append(
+                        sum(a != b for a, b in zip(seq, seq[1:])))
+            # Prefill each fresh admit (latency-sensitive, slab-mode
+            # skewed GEMMs), then batch the decode loop.
+            for r in fresh:
+                cache, pos_r = self._prefill_one(r)
                 caches.append(cache)
-                positions.append(pos)
+                positions.append(pos_r)
+            # Co-execution: the prefills the packer placed on this
+            # step's idle slabs run inside the decode window below.
+            to_backfill: List[Request] = []
+            if self.coexec_backend and self.multi_tenant:
+                nb = min(n_pre, len(self.queue))
+                to_backfill = [self.queue.popleft() for _ in range(nb)]
             batched_cache = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=1), *caches)
             pos = max(positions)
@@ -186,6 +267,10 @@ class ServeEngine:
                 self.stats["decode_steps"] += 1
                 pos += 1
                 max_steps -= 1
+                if to_backfill:
+                    # One co-resident prefill per decode iteration — the
+                    # serving-level interleave of the fused grid axis.
+                    self._backfill_one(to_backfill.pop(0))
                 nxt = np.asarray(
                     jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
                 still = []
@@ -205,4 +290,8 @@ class ServeEngine:
                         batched_cache = jax.tree.map(
                             lambda x: x[:, idx], batched_cache)
                     live = still
+            # Decode drained before every co-scheduled prefill ran:
+            # finish them now, still within this step's window.
+            for r in to_backfill:
+                self._backfill_one(r)
         return finished

@@ -1,0 +1,260 @@
+"""Fused multi-tenant co-execution: kernel numerics + engine backfill.
+
+Covers the acceptance contract of the co-exec path:
+
+* fused output == per-tenant dense references across skewed shapes
+  (decode M=1..16 mixed with a prefill M=512);
+* empty placement and single-tenant degeneracy (co-exec == the existing
+  single-GEMM kernel path);
+* fused == sequential **bit-for-bit** when both run the same plan's
+  block shapes (identical f32 accumulation order);
+* grid-task order (the packer's schedule) never changes results;
+* engine: `coexec_backend` generates the same tokens as the sequential
+  fallback, and a prefill completed via backfill is never re-prefilled
+  nor re-counted against the next step's ladder quantization.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coexec_tile_sequence, SISA_128
+from repro.core.multi import GemmRequest, pack_requests
+from repro.hw.specs import SISA_ASIC
+from repro.kernels.coexec import (build_coexec_plan, coexec_matmul,
+                                  CoexecTenant, interleave_order,
+                                  sequential_matmul)
+
+RNG = np.random.default_rng(11)
+
+
+def _operands(shapes):
+    """shapes: [(m, k, n)] -> per-tenant activations and weights."""
+    xs = [jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+          for (m, k, n) in shapes]
+    ws = [jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+          for (m, k, n) in shapes]
+    return xs, ws
+
+
+def _tenants(shapes):
+    return [CoexecTenant(rid=i, m=m, n=n, k=k)
+            for i, (m, k, n) in enumerate(shapes)]
+
+
+class TestCoexecKernel:
+    @pytest.mark.parametrize("shapes", [
+        [(1, 64, 96), (16, 128, 200), (4, 300, 130)],
+        [(2, 64, 64)],
+        [(8, 128, 128)] * 4,
+        [(3, 200, 64), (15, 64, 516), (9, 128, 128), (1, 96, 96)],
+    ])
+    def test_matches_dense_refs(self, shapes):
+        xs, ws = _operands(shapes)
+        outs = coexec_matmul(xs, ws, interpret=True)
+        assert len(outs) == len(shapes)
+        for x, w, o in zip(xs, ws, outs):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(x @ w),
+                                       atol=1e-3, rtol=1e-4)
+
+    def test_skewed_decode_mixed_with_prefill(self):
+        # The serving co-residency case: decode tenants M=1..16 sharing
+        # the grid with a prefill chunk M=512.
+        shapes = [(1, 64, 128), (16, 96, 200), (7, 128, 64), (512, 64, 128)]
+        xs, ws = _operands(shapes)
+        outs = coexec_matmul(xs, ws, interpret=True)
+        for x, w, o in zip(xs, ws, outs):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(x @ w),
+                                       atol=1e-3, rtol=1e-4)
+
+    def test_empty_placement(self):
+        assert coexec_matmul([], []) == []
+        assert sequential_matmul([], []) == []
+
+    def test_single_tenant_degenerates_to_existing_kernel(self):
+        from repro.kernels.ops import _pallas_matmul
+        x = jnp.asarray(RNG.normal(size=(12, 160)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(160, 224)), jnp.float32)
+        fused = coexec_matmul([x], [w], interpret=True)[0]
+        single = _pallas_matmul(x, w, interpret=True)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(single),
+                                   atol=1e-3, rtol=1e-4)
+
+    def test_fused_bitwise_equals_sequential(self):
+        shapes = [(1, 64, 96), (16, 128, 200), (512, 96, 64), (4, 300, 130)]
+        xs, ws = _operands(shapes)
+        plan = build_coexec_plan(_tenants(shapes), jnp.float32)
+        fused = coexec_matmul(xs, ws, plan=plan, interpret=True)
+        serial = sequential_matmul(xs, ws, plan=plan, interpret=True)
+        for f, s in zip(fused, serial):
+            np.testing.assert_array_equal(np.asarray(f), np.asarray(s))
+
+    def test_grid_order_never_changes_results(self):
+        shapes = [(4, 64, 128), (16, 64, 128), (1, 64, 128)]
+        xs, ws = _operands(shapes)
+        tens = _tenants(shapes)
+        orders = [None, [2, 1, 0], [0, 0, 1, 2], [1]]
+        base = None
+        for order in orders:
+            plan = build_coexec_plan(tens, jnp.float32, order=order)
+            outs = coexec_matmul(xs, ws, plan=plan, interpret=True)
+            if base is None:
+                base = outs
+            else:
+                for a, b in zip(base, outs):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+
+    def test_interleave_order_round_robin(self):
+        assert interleave_order([2, 1, 3]) == [0, 1, 2, 0, 2, 2]
+        # A schedule sequence drains queues in schedule order, cycling.
+        assert interleave_order([2, 2], [1, 0]) == [1, 0, 1, 0]
+        # Tenants absent from the sequence still drain at the end.
+        assert interleave_order([1, 1], [0]) == [0, 1]
+        # Sequence entries naming no tenant (schedule wider than the
+        # fused tenant set) are ignored, not an IndexError.
+        assert interleave_order([1, 1], [5, 1, 0]) == [1, 0]
+        assert interleave_order([2], [7, 8]) == [0, 0]
+
+    def test_order_from_wider_schedule(self):
+        # pack_requests over more requests than fused tenants: the extra
+        # rids in the schedule-derived order must be ignored.
+        reqs = [GemmRequest(rid=i, m=8, n=128, k=64) for i in range(5)]
+        packed = pack_requests(reqs, SISA_128, SISA_ASIC)
+        order = coexec_tile_sequence(packed, rids=[r.rid for r in reqs])
+        shapes = [(8, 64, 128)] * 3                 # only 3 tenants fused
+        xs, ws = _operands(shapes)
+        plan = build_coexec_plan(_tenants(shapes), jnp.float32, order=order)
+        outs = coexec_matmul(xs, ws, plan=plan, interpret=True)
+        for x, w, o in zip(xs, ws, outs):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(x @ w),
+                                       atol=1e-3, rtol=1e-4)
+
+    def test_plan_tile_table_shape(self):
+        shapes = [(4, 64, 300), (20, 64, 300)]
+        plan = build_coexec_plan(_tenants(shapes), jnp.float32)
+        assert plan.meta.shape[0] == 5
+        assert plan.n_tasks == plan.tenant_tasks(0) + plan.tenant_tasks(1)
+        # Row blocks of distinct tenants are disjoint.
+        t0 = plan.meta[1, plan.meta[0] == 0]
+        t1 = plan.meta[1, plan.meta[0] == 1]
+        assert not set(t0.tolist()) & set(t1.tolist())
+
+    def test_tile_sequence_from_packed_schedule(self):
+        reqs = [GemmRequest(rid=i, m=8, n=128, k=896) for i in range(4)]
+        packed = pack_requests(reqs, SISA_128, SISA_ASIC)
+        seq = coexec_tile_sequence(packed, rids=[r.rid for r in reqs])
+        assert len(seq) == len(packed.tile_runs)
+        assert set(seq) <= set(range(4))
+        assert all(r.tile is not None for r in packed.tile_runs)
+        # The event-driven placement co-schedules the narrow GEMMs: the
+        # first wave of tile runs comes from distinct tenants.
+        if packed.chosen == "packed":
+            assert len(set(seq[:4])) > 1
+
+
+class TestEngineCoexec:
+    def _run_engine(self, coexec_backend):
+        import jax
+
+        from repro.configs import smoke_config
+        from repro.models import init_params
+        from repro.serve import Request, ServeEngine
+        from repro.serve.serve_step import (make_decode_step,
+                                            make_prefill_step)
+        cfg = smoke_config("yi-6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prefill = jax.jit(make_prefill_step(cfg, cache_len=64))
+        decode = jax.jit(make_decode_step(cfg))
+        counts = {}
+
+        def counted_prefill(p, batch):
+            rid = int(np.asarray(batch["tokens"]).sum())  # content key
+            counts[rid] = counts.get(rid, 0) + 1
+            return prefill(p, batch)
+
+        eng = ServeEngine(cfg, params, prefill_fn=counted_prefill,
+                          decode_fn=decode, cache_init_fn=None,
+                          max_batch=2, max_seq=64,
+                          coexec_backend=coexec_backend)
+        rng = np.random.default_rng(0)
+        for i in range(5):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=6).astype(np.int32),
+                max_new_tokens=3))
+        done = eng.run(max_steps=200)
+        tokens = {r.rid: tuple(r.generated) for r in done}
+        return tokens, counts, eng.stats
+
+    def test_coexec_tokens_match_sequential_and_no_double_prefill(self):
+        seq_tokens, seq_counts, _ = self._run_engine(None)
+        co_tokens, co_counts, stats = self._run_engine("pallas_interpret")
+        # Numerics equivalence: same tokens for every request.
+        assert co_tokens == seq_tokens
+        assert len(co_tokens) == 5
+        # Deferred-accounting regression: a prefill completed via
+        # backfill must not be re-prefilled at its decode admission.
+        assert all(c == 1 for c in co_counts.values()), co_counts
+        assert sum(co_counts.values()) == sum(seq_counts.values()) == 5
+        # Backfill really happened, and each step emitted a fused tile
+        # table for its placement.
+        assert stats["backfilled"] > 0
+        assert stats["coexec_tiles"]
+        assert all(n > 0 for n in stats["coexec_tiles"])
+        assert len(stats["coexec_interleave"]) == len(stats["coexec_tiles"])
+
+    def test_backfilled_requests_counted_live_not_waiting(self):
+        """The step after a backfill must quantize its ladder over the
+        backfilled request as *live* and exclude it from the waiting
+        prefill set (the deferred-accounting bug)."""
+        from unittest import mock
+
+        from repro.configs import get_config
+        from repro.serve.engine import (plan_step_packing, Request,
+                                        ServeEngine)
+
+        cfg = get_config("qwen2.5-0.5b")
+        prefilled_rids = []
+
+        def fake_prefill(params, batch):
+            # rid is smuggled in as the first prompt token.
+            prefilled_rids.append(int(np.asarray(batch["tokens"])[0, 0]))
+            s = batch["tokens"].shape[1]
+            return (jnp.zeros((1, s, cfg.vocab_size)),
+                    {"k": jnp.zeros((1, 1, 8, 1, 2))})
+
+        def fake_decode(params, cache, toks, pos):
+            return jnp.zeros((toks.shape[0], 1, cfg.vocab_size)), cache
+
+        eng = ServeEngine(cfg, None, prefill_fn=fake_prefill,
+                          decode_fn=fake_decode, cache_init_fn=None,
+                          max_batch=1, max_seq=32,
+                          coexec_backend="pallas_interpret")
+        r0 = Request(rid=0, prompt=np.full(4, 0, np.int32),
+                     max_new_tokens=1)
+        r1 = Request(rid=1, prompt=np.full(4, 1, np.int32),
+                     max_new_tokens=1)
+        # r0's prefill already completed via backfill last step.
+        r0.generated.append(0)
+        eng.queue.append(r1)
+        eng._backfilled.append((r0, {"k": jnp.zeros((1, 1, 8, 1, 2))}, 4))
+
+        seen = {}
+
+        def spy_plan(bsz, waiting, cfg_, max_coresident=4):
+            seen.setdefault("waiting", list(waiting))
+            return plan_step_packing(bsz, waiting, cfg_, max_coresident)
+
+        with mock.patch("repro.serve.engine.plan_step_packing",
+                        side_effect=spy_plan):
+            done = eng.run(max_steps=1)
+        # r0 was admitted from the backfill queue without re-prefill:
+        # only r1 (backfilled into the decode window) hit prefill_fn.
+        assert [r.rid for r in done] == [0]
+        assert prefilled_rids == [1]
+        # The ladder quantized over both live requests (n_live=2,
+        # capped by max_batch=1)...
+        assert eng.stats["batches"] == [1]
+        # ...and the first step's waiting set held only r1's prompt —
+        # the backfilled r0 no longer counts as a pending prefill.
+        assert seen["waiting"] == [4]
+        assert eng.stats["backfilled"] == 1
