@@ -5,7 +5,10 @@
 Submits a mixed queue of short/long prompts, serves them with continuous
 batching where the decode batch size is quantized to the slab ladder by
 the cycle simulator (repro.serve.engine), and reports TTFT + the
-scheduler's batch choices.
+scheduler's batch choices.  The same workload is then replayed on the
+ladder-locked slot engine (repro.serve.slot_engine) — persistent slot
+cache, fixed decode shapes, multi-token windows — which must generate
+identical tokens with at most one decode compile per ladder rung.
 """
 import sys
 sys.path.insert(0, "src")
@@ -17,7 +20,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import init_params
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, SlotServeEngine
 from repro.serve.serve_step import make_decode_step, make_prefill_step
 
 
@@ -55,6 +58,40 @@ def main():
               f"prefills co-scheduled, predicted step speedup "
               f"x{np.mean(sp):.2f} (max x{np.max(sp):.2f})")
     assert len(done) == len(lengths)
+
+    # Same workload on the ladder-locked fast path: slot cache, fixed
+    # SLAB_LADDER decode shapes, on-device multi-token windows.
+    slot = SlotServeEngine(cfg, params, max_batch=8, max_seq=96, window=8)
+    rng = np.random.default_rng(0)
+    for i, L in enumerate(lengths):
+        slot.submit(Request(
+            rid=i, prompt=rng.integers(2, cfg.vocab_size,
+                                       size=L).astype(np.int32),
+            max_new_tokens=8))
+    t0 = time.time()
+    done_slot = slot.run(max_steps=256)
+    dt_slot = time.time() - t0
+    st = slot.stats
+    print(f"[slot]  completed {len(done_slot)}/{len(lengths)} requests "
+          f"in {dt_slot*1e3:.0f}ms host time ({dt/max(dt_slot, 1e-9):.2f}x)")
+    print(f"[slot]  TTFT p50={np.median(st['ttft'])*1e3:.1f}ms; "
+          f"{st['windows']} windows at rungs {sorted(set(st['rungs']))}; "
+          f"{st['decode_compiles']} decode compiles; prefill buckets "
+          f"{st['prefill_bucket_hits']}h/{st['prefill_bucket_misses']}m")
+    # Guaranteed: identical stop rules -> identical token *counts* per
+    # request (the workload stays clear of the max_seq edge).  Value
+    # identity on mixed-length batches is reported, not asserted: the
+    # sequential engine shares pos=max(positions) across rows, so its
+    # short-row numerics deviate slightly from the per-slot reference
+    # (see repro.serve.slot_engine docs) even though argmax agrees here.
+    counts_ok = ({r.rid: len(r.generated) for r in done_slot}
+                 == {r.rid: len(r.generated) for r in done})
+    same = ({r.rid: tuple(r.generated) for r in done_slot}
+            == {r.rid: tuple(r.generated) for r in done})
+    print(f"[slot]  tokens identical to sequential engine: {same}")
+    assert counts_ok and len(done_slot) == len(lengths)
+    if st["decode_compiles"] is not None:
+        assert st["decode_compiles"] <= len(set(st["rungs"]))
 
 
 if __name__ == "__main__":

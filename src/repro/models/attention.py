@@ -291,34 +291,51 @@ def attn_decode_step(p, x: Array, cache: Dict[str, Array], pos: Array,
                      cfg, *, kind: str,
                      sharder: Sharder = IDENTITY_SHARDER
                      ) -> Tuple[Array, Dict[str, Array]]:
-    """One-token step. x: (B, 1, d); pos: scalar current position."""
+    """One-token step. x: (B, 1, d); pos: current position — a scalar
+    (whole batch at one position) or a (B,) vector of per-row positions
+    (the slot-engine case: each slot decodes at its own sequence length,
+    so short requests never attend past their own prompt)."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     cap = cache["k"].shape[1]
-    positions = jnp.full((1, 1), pos)
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((1, 1), pos)
     q = _split_heads(linear_apply(p["q"], x), cfg.n_heads)
     k = _split_heads(linear_apply(p["k"], x), cfg.n_kv_heads)
     v = _split_heads(linear_apply(p["v"], x), cfg.n_kv_heads)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     slot = pos % cap
+
+    if per_row:
+        # Per-row scatter: row i writes its (Hkv, hd) K/V at its own
+        # ring slot — O(B) stores (in-place under buffer donation), not
+        # a select over the whole (B, cap, ...) cache.
+        rows = jnp.arange(b)
+
+        def upd(buf, new):
+            return buf.at[rows, slot].set(new[:, 0])
+    else:
+        def upd(buf, new):
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, slot,
+                                                       axis=1)
+
     if CACHE_QUANT["enabled"]:
         kq, ks = _quant_kv(k)
         vq, vs = _quant_kv(v)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
-        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks, slot,
-                                                  axis=1)
-        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs, slot,
-                                                  axis=1)
+        ck = upd(cache["k"], kq)
+        cv = upd(cache["v"], vq)
+        cks = upd(cache["k_s"], ks)
+        cvs = upd(cache["v_s"], vs)
         ck = sharder.constrain(ck, "kv_cache")
         cv = sharder.constrain(cv, "kv_cache")
         new_cache = {"k": ck, "v": cv, "k_s": cks, "v_s": cvs}
         kd = _dequant_kv(ck, cks, x.dtype)
         vd = _dequant_kv(cv, cvs, x.dtype)
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        ck = upd(cache["k"], k)
+        cv = upd(cache["v"], v)
         ck = sharder.constrain(ck, "kv_cache")
         cv = sharder.constrain(cv, "kv_cache")
         new_cache = {"k": ck, "v": cv}
@@ -326,8 +343,12 @@ def attn_decode_step(p, x: Array, cache: Dict[str, Array], pos: Array,
     # Valid slots: ring-buffer logical position of slot j is
     # pos - ((pos - j) mod cap); valid iff >= 0 (and causality is implied).
     j = jnp.arange(cap)
-    logical = pos - jnp.mod(pos - j, cap)
-    mask = (logical >= 0)[None, None, None, :]      # (1,1,1,cap)
+    if per_row:
+        logical = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], cap)
+        mask = (logical >= 0)[:, None, None, :]     # (B,1,1,cap)
+    else:
+        logical = pos - jnp.mod(pos - j, cap)
+        mask = (logical >= 0)[None, None, None, :]  # (1,1,1,cap)
     kk = _repeat_kv(kd, cfg.n_heads // cfg.n_kv_heads)
     vv = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
     out = _sdpa(q, kk, vv, mask, sharder)

@@ -324,8 +324,17 @@ def _block_prefill(p, x, kind, cfg, cap_seq, *, sharder, enc_out,
 def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
                     cache_len: Optional[int] = None,
                     sharder: Sharder = IDENTITY_SHARDER, mesh=None,
-                    batch_axes=()) -> Tuple[Array, List[PyTree]]:
-    """Process a prompt; return (last-position logits, filled cache)."""
+                    batch_axes=(),
+                    logits_index: Optional[Array] = None
+                    ) -> Tuple[Array, List[PyTree]]:
+    """Process a prompt; return (last-position logits, filled cache).
+
+    ``logits_index`` (traced scalar) selects which position's logits to
+    return instead of the static last position — the bucketed-prefill
+    path pads prompts to a shape bucket and reads the logits of the last
+    *real* token, so one compilation serves every prompt length in the
+    bucket (causal masking makes trailing pad tokens invisible to it).
+    """
     enc_out = None
     if cfg.enc_dec:
         enc_out = _encode(params, cfg, batch, sharder=sharder, remat="none",
@@ -351,7 +360,11 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
         x, cache = jax.lax.scan(body, x, gp)
         caches.append(cache)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    return _logits(params, cfg, x[:, -1:]), caches
+    if logits_index is not None:
+        x_last = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
+    else:
+        x_last = x[:, -1:]
+    return _logits(params, cfg, x_last), caches
 
 
 def _block_decode(p, x, cache, pos, kind, cfg, *, sharder,
@@ -386,7 +399,9 @@ def forward_decode(params, cfg: ModelConfig, tokens: Array,
                    caches: List[PyTree], pos: Array, *,
                    sharder: Sharder = IDENTITY_SHARDER, mesh=None,
                    batch_axes=()) -> Tuple[Array, List[PyTree]]:
-    """One decode step. tokens: (B, 1); pos: scalar position index."""
+    """One decode step. tokens: (B, 1); pos: scalar position index, or a
+    (B,) vector of per-row positions (slot-engine decode — see
+    :func:`repro.models.attention.attn_decode_step`)."""
     x = embedding_lookup(params["embed"], tokens)
     x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
     x = sharder.constrain(x, "hidden_decode")

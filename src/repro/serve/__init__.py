@@ -1,6 +1,8 @@
 from repro.serve.engine import choose_decode_batch, Request, ServeEngine
-from repro.serve.serve_step import (cache_specs, make_decode_step,
-                                    make_prefill_step)
+from repro.serve.serve_step import (cache_specs, make_bucketed_prefill_step,
+                                    make_decode_step, make_prefill_step)
+from repro.serve.slot_engine import SlotKVCache, SlotServeEngine
 
-__all__ = ["cache_specs", "make_decode_step", "make_prefill_step",
-           "Request", "ServeEngine", "choose_decode_batch"]
+__all__ = ["cache_specs", "make_bucketed_prefill_step", "make_decode_step",
+           "make_prefill_step", "Request", "ServeEngine", "SlotKVCache",
+           "SlotServeEngine", "choose_decode_batch"]

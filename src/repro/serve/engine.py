@@ -43,6 +43,7 @@ from __future__ import annotations
 
 from collections import deque
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
@@ -81,20 +82,33 @@ def _llm_workload_of(cfg: ModelConfig) -> LLMWorkload:
     ))
 
 
+@functools.lru_cache(maxsize=4096)
+def _rung_cycles(cfg: ModelConfig, rung: int) -> float:
+    """Simulated cycles for one full decode pass at batch = ``rung``.
+
+    ``ModelConfig`` is a frozen (hashable) dataclass, so the simulator
+    sweep is memoized per ``(cfg, ladder_rung)`` — the engine calls
+    :func:`choose_decode_batch` every step, and re-running
+    ``simulate_workload`` for the whole ladder each time dominated the
+    admission path.
+    """
+    wl = _llm_workload_of(cfg)
+    return simulate_workload(wl.gemms(rung), SISA_128).cycles
+
+
 def choose_decode_batch(n_live: int, cfg: ModelConfig,
                         max_batch: int = 128) -> int:
     """SISA-aware batch quantization: pick the ladder size minimizing
-    predicted cycles-per-token (simulator-driven, not a heuristic)."""
+    predicted cycles-per-token (simulator-driven, not a heuristic).
+    The per-rung simulation is cached on ``(cfg, rung)``."""
     if n_live <= 0:
         return 0
-    wl = _llm_workload_of(cfg)
     best_b, best_cpt = None, float("inf")
     for b in SLAB_LADDER:
         if b > max_batch:
             break
         served = min(n_live, b)
-        cycles = simulate_workload(wl.gemms(b), SISA_128).cycles
-        cpt = cycles / served
+        cpt = _rung_cycles(cfg, b) / served
         if cpt < best_cpt - 1e-9:
             best_b, best_cpt = b, cpt
         if b >= n_live:
@@ -127,6 +141,69 @@ def plan_step_packing(decode_bsz: int, prompt_lens: List[int],
     return packed, serial, len(prompts)
 
 
+def note_first_token(req: Request, logits, vocab: int,
+                     stats: Dict[str, Any]) -> None:
+    """Record a prefill's greedy first token and TTFT on ``req``.
+
+    Shared by the sequential and slot engines so the first-token
+    bookkeeping (greedy argmax over the real vocab, TTFT sample) cannot
+    drift between them.
+    """
+    nxt = int(jnp.argmax(logits[0, -1, :vocab]))
+    req.generated.append(nxt)
+    req.first_token_at = time.time()
+    stats["ttft"].append(req.first_token_at - req.arrived)
+
+
+def init_serve_stats(coexec_backend: Optional[str],
+                     expert_backend: Optional[str]) -> Dict[str, Any]:
+    """Validate backends, apply the expert backend, and build the stats
+    dict shared by both serving engines.
+
+    With ``expert_backend`` set, MoE expert FFNs lower through the flat
+    ragged grouped kernel (``repro.kernels.grouped_gemm``) for both EP
+    impls — no capacity buffer on the hot path.  One definition serves
+    :class:`ServeEngine` and
+    :class:`~repro.serve.slot_engine.SlotServeEngine` so accepted
+    backends and stats keys cannot drift between them.
+    """
+    if coexec_backend not in (None, "pallas", "pallas_interpret", "xla"):
+        raise ValueError(f"unknown coexec_backend {coexec_backend!r}")
+    from repro.models.moe import EXPERT_BACKEND
+    if expert_backend is not None:
+        from repro.models.moe import set_expert_backend
+        set_expert_backend(expert_backend)
+    return {"batches": [], "ttft": [], "decode_steps": 0,
+            "packed_speedup": [], "packed_prefills": 0,
+            "backfilled": 0, "coexec_tiles": [], "coexec_interleave": [],
+            "coexec_backend": coexec_backend,
+            "expert_backend": expert_backend or EXPERT_BACKEND["impl"]}
+
+
+def record_step_packing(stats: Dict[str, Any], decode_bsz: int,
+                        waiting: List[int], cfg: ModelConfig,
+                        coexec: bool) -> int:
+    """Plan one step's multi-tenant placement and record its stats.
+
+    Runs :func:`plan_step_packing` over the live decode batch and the
+    waiting prompts, appends the packed-speedup sample and (when
+    ``coexec`` is set) the fused grid-task order's size/interleaving,
+    and returns the number of co-scheduled prefills.  Shared by both
+    engines — the deferred-accounting rules around this block are
+    subtle enough that they must exist exactly once.
+    """
+    packed, serial, n_pre = plan_step_packing(decode_bsz, waiting, cfg)
+    if packed.makespan > 0:
+        stats["packed_speedup"].append(serial.cycles / packed.makespan)
+    stats["packed_prefills"] += n_pre
+    if coexec:
+        seq = coexec_tile_sequence(packed)
+        stats["coexec_tiles"].append(len(seq))
+        stats["coexec_interleave"].append(
+            sum(a != b for a, b in zip(seq, seq[1:])))
+    return n_pre
+
+
 class ServeEngine:
     """Drives jitted prefill/decode over a request queue."""
 
@@ -147,33 +224,13 @@ class ServeEngine:
         # Co-execution: execute (not just predict) each step's packed
         # placement — deferred prefills ride the decode window and join
         # the next batch decode-ready.  Requires multi_tenant.
-        if coexec_backend not in (None, "pallas", "pallas_interpret",
-                                  "xla"):
-            raise ValueError(f"unknown coexec_backend {coexec_backend!r}")
+        self.stats: Dict[str, Any] = init_serve_stats(coexec_backend,
+                                                      expert_backend)
         self.coexec_backend = coexec_backend
         self.queue: Deque[Request] = deque()
         # (request, prefilled cache, position): prefills completed via
         # backfill, awaiting decode admission.
         self._backfilled: Deque[Tuple[Request, Any, int]] = deque()
-        from repro.models.moe import EXPERT_BACKEND
-        self.stats: Dict[str, Any] = {"batches": [], "ttft": [],
-                                      "decode_steps": 0,
-                                      "packed_speedup": [],
-                                      "packed_prefills": 0,
-                                      "backfilled": 0,
-                                      "coexec_tiles": [],
-                                      "coexec_interleave": [],
-                                      "coexec_backend": coexec_backend,
-                                      "expert_backend": expert_backend
-                                      or EXPERT_BACKEND["impl"]}
-        if expert_backend is not None:
-            # MoE expert FFNs lower through the flat ragged grouped
-            # kernel (repro.kernels.grouped_gemm) for both EP impls:
-            # "psum" dispatches prefix groups at block-aligned cumulative
-            # offsets, "all_to_all" per-rank segment offsets — no
-            # (E, C, d) capacity buffer is materialized on the hot path.
-            from repro.models.moe import set_expert_backend
-            set_expert_backend(expert_backend)
 
     def submit(self, req: Request) -> None:
         req.arrived = time.time()
@@ -183,10 +240,7 @@ class ServeEngine:
         s = len(req.prompt)
         tokens = jnp.asarray(req.prompt[None], jnp.int32)
         logits, cache = self.prefill_fn(self.params, {"tokens": tokens})
-        nxt = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
-        req.generated.append(nxt)
-        req.first_token_at = time.time()
-        self.stats["ttft"].append(req.first_token_at - req.arrived)
+        note_first_token(req, logits, self.cfg.vocab_size, self.stats)
         return cache, s
 
     def _backfill_one(self, req: Request) -> None:
@@ -228,21 +282,13 @@ class ServeEngine:
                 # prefill GEMMs on idle slab groups.  Already-backfilled
                 # prefills are excluded — their work is done.
                 waiting = [len(r.prompt) for r in self.queue]
-                packed, serial, n_pre = plan_step_packing(
-                    bsz, waiting, self.cfg)
-                if packed.makespan > 0:
-                    self.stats["packed_speedup"].append(
-                        serial.cycles / packed.makespan)
-                self.stats["packed_prefills"] += n_pre
-                if self.coexec_backend:
-                    # Lower the placement to the fused kernel's
-                    # grid-task order and record its co-residency:
-                    # adjacent-task tenant switches are the interleaving
-                    # the fused grid would execute for this step.
-                    seq = coexec_tile_sequence(packed)
-                    self.stats["coexec_tiles"].append(len(seq))
-                    self.stats["coexec_interleave"].append(
-                        sum(a != b for a, b in zip(seq, seq[1:])))
+                # The placement is lowered to the fused kernel's
+                # grid-task order when coexec is set: adjacent-task
+                # tenant switches are the interleaving the fused grid
+                # would execute for this step.
+                n_pre = record_step_packing(
+                    self.stats, bsz, waiting, self.cfg,
+                    bool(self.coexec_backend))
             # Prefill each fresh admit (latency-sensitive, slab-mode
             # skewed GEMMs), then batch the decode loop.
             for r in fresh:

@@ -33,6 +33,31 @@ def make_prefill_step(cfg: ModelConfig, mesh=None, *,
     return prefill_step
 
 
+def make_bucketed_prefill_step(cfg: ModelConfig, mesh=None, *,
+                               cache_len: Optional[int] = None):
+    """Prefill over pad-to-bucket prompts: one compilation per bucket.
+
+    The returned step takes ``batch = {"tokens": (1, S_bucket) int32,
+    "last_index": scalar int32}`` where ``tokens`` is the prompt padded
+    (with any token id — causal masking hides it) to a shape bucket and
+    ``last_index`` is the position of the last *real* prompt token.  It
+    returns that position's logits plus the filled cache, so
+    ``prefill_fn`` stops recompiling once per unique prompt length.
+    Trailing pad K/V lands in cache slots the per-row decode mask keeps
+    invisible until the decode loop overwrites them (slot engine).
+    """
+    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
+    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+
+    def prefill_step(params, batch: Dict[str, jax.Array]):
+        return forward_prefill(params, cfg, batch, cache_len=cache_len,
+                               sharder=sharder, mesh=mesh,
+                               batch_axes=batch_axes,
+                               logits_index=batch["last_index"])
+
+    return prefill_step
+
+
 def make_decode_step(cfg: ModelConfig, mesh=None):
     sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
     batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()

@@ -1,0 +1,419 @@
+"""Slot-based serving fast path: ladder-locked decode with zero steady-state
+recompiles and an on-device multi-token loop.
+
+:class:`~repro.serve.engine.ServeEngine` proves the *policy* (§4.3 ladder
+quantization, multi-tenant co-scheduling) but undoes the win at the system
+level: every admission re-concatenates the KV cache, every batch shrink
+re-jits ``decode_fn`` at a new batch size, and every token round-trips to
+the host for the argmax.  This module rebuilds the decode hot path so the
+serving loop is as ladder-shaped as the kernels:
+
+* **Persistent slot cache** (:class:`SlotKVCache`): KV/recurrent caches
+  live in fixed ``(layers, max_batch, max_seq, ...)`` buffers.  A request
+  is *assigned* a slot at admission (one jitted donated
+  ``dynamic_update_slice`` writes its prefilled cache in) and *releases*
+  it when done — no per-step ``jnp.concatenate``, no gather-shrink.
+  Slot reuse is safe because admission overwrites the slot's full
+  sequence capacity.
+
+* **Fixed-shape ladder decode**: the decode window always runs at a
+  ``SLAB_LADDER`` rung (the smallest rung covering the highest live
+  slot), with per-slot budgets masking holes and finished rows.  After
+  one warmup compile per rung there are zero recompiles for the rest of
+  the serve — ``stats["decode_compiles"]`` tracks the jit cache.
+
+* **On-device multi-token window**: ``lax.scan`` over ``window`` tokens
+  with on-device greedy argmax, per-slot positions (short requests never
+  attend past their own length — the legacy engine forced
+  ``pos = max(positions)`` on every row), per-slot done flags, and
+  donated cache buffers.  The host syncs once per window instead of once
+  per token; co-exec prefill backfill runs at window boundaries.
+
+* **Bucketed prefill**: prompts pad to power-of-two buckets
+  (:func:`repro.serve.serve_step.make_bucketed_prefill_step`) so
+  ``prefill_fn`` compiles once per bucket, not once per unique prompt
+  length.  Bucketing is enabled only where pad-append is exact: pure
+  attention stacks (causal masking hides trailing pads; the per-slot
+  decode mask keeps their cache slots invisible until overwritten).
+  Recurrent (RG-LRU/RWKV) states, MoE routing, and enc-dec fold pad
+  tokens into real outputs, so those configs always take the
+  exact-length path (counted as bucket misses).
+
+Token equivalence: in the slot engine, rows are fully independent — a
+request's tokens equal its single-request serve regardless of batch
+composition (tested against singleton serves in
+``tests/test_slot_engine.py``).  On *uniform-length* workloads the
+sequential engine computes the same thing, so the two are
+token-identical (``tests/test_coexec.py``, with and without
+``coexec_backend``).  On mixed-length batches the sequential engine is
+the one that deviates from the singleton reference — it forces every
+row to ``pos = max(positions)``, attending zero-K/V gap slots — which
+is exactly the inefficiency per-slot positions remove; greedy argmax
+still agrees on the tested workloads, but only the slot engine's
+outputs are batch-invariant by construction.
+"""
+from __future__ import annotations
+
+from collections import deque
+import time
+from typing import Any, Callable, Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, LOCAL, ModelConfig
+from repro.serve.engine import (choose_decode_batch, init_serve_stats,
+                                note_first_token, record_step_packing,
+                                Request, SLAB_LADDER)
+from repro.serve.serve_step import (make_bucketed_prefill_step,
+                                    make_decode_step)
+
+PyTree = Any
+
+_MIN_BUCKET = 8
+
+
+def jit_cache_entries(fn) -> Optional[int]:
+    """Compiled-variant count of a jitted callable, or None.
+
+    ``_cache_size`` is a private jax API; if a future jax drops it the
+    compile-count *stats* degrade to None but serving keeps working
+    (tests skip the exact-count assertions in that case).
+    """
+    size = getattr(fn, "_cache_size", None)
+    return size() if callable(size) else None
+
+
+class SlotKVCache:
+    """Fixed slot buffers + free list for the persistent serving cache.
+
+    Buffers are allocated lazily from the first prefilled cache (so the
+    structure matches whatever the model's prefill emits — attention KV,
+    recurrent states, quantized caches) with the batch axis widened to
+    ``max_slots``.  ``write`` is a single jitted donated update, so slot
+    admission costs one dynamic-slice store, never a concatenate.
+    """
+
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.buffers: Optional[List[PyTree]] = None
+        self._free = list(range(max_slots - 1, -1, -1))  # pop() -> lowest
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._write = jax.jit(
+            lambda bufs, new, slot: jax.tree.map(
+                lambda b, n: jax.lax.dynamic_update_slice_in_dim(
+                    b, n, slot, axis=1), bufs, new),
+            donate_argnums=donate)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        """Claim the lowest free slot (keeps live slots packed at the
+        front, so the ladder rung stays minimal)."""
+        return self._free.pop()
+
+    def release(self, slot: int) -> None:
+        """Return a slot to the free list.  The stale cache content is
+        left in place — the next admission overwrites the slot's full
+        sequence capacity, so no tokens can leak across requests."""
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    def write(self, prefill_cache: List[PyTree], slot: int) -> None:
+        """Store a single-request prefilled cache into ``slot``."""
+        if self.buffers is None:
+            self.buffers = jax.tree.map(
+                lambda x: jnp.zeros(
+                    x.shape[:1] + (self.max_slots,) + x.shape[2:], x.dtype),
+                prefill_cache)
+        self.buffers = self._write(self.buffers, prefill_cache,
+                                   jnp.int32(slot))
+
+
+class SlotServeEngine:
+    """Ladder-locked continuous batching over a persistent slot cache.
+
+    Drop-in peer of :class:`~repro.serve.engine.ServeEngine` (same
+    ``submit``/``run``/``stats`` surface, token-identical outputs) whose
+    hot path is compile-stable: decode runs at fixed ``SLAB_LADDER``
+    rungs over slot buffers, generating ``window`` tokens per host sync.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 prefill_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None,
+                 cache_init_fn: Optional[Callable] = None,
+                 max_batch: int = 8, max_seq: int = 256, window: int = 8,
+                 multi_tenant: bool = True,
+                 prefill_bucketing: bool = True,
+                 prefill_is_bucketed: Optional[bool] = None,
+                 expert_backend: Optional[str] = None,
+                 coexec_backend: Optional[str] = None):
+        del cache_init_fn  # slot buffers are shaped from the first prefill
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.window = window
+        self.multi_tenant = multi_tenant
+        self.stats = init_serve_stats(coexec_backend, expert_backend)
+        self.stats.update({
+            "windows": 0, "rungs": [], "decode_compiles": 0,
+            "prefill_bucket_hits": 0, "prefill_bucket_misses": 0,
+            "slot_admits": 0, "slot_releases": 0,
+        })
+        self.coexec_backend = coexec_backend
+
+        # Ladder rungs available at this engine's max_batch; decode only
+        # ever compiles at these batch shapes.
+        rungs = sorted({b for b in SLAB_LADDER if b <= max_batch}
+                       | {max_batch})
+        self.rungs: Tuple[int, ...] = tuple(rungs)
+
+        # Bucketing is exact only for pure-attention stacks (module doc).
+        structurally_ok = (not cfg.enc_dec and cfg.moe is None
+                           and cfg.frontend is None
+                           and all(k in (ATTN, LOCAL)
+                                   for k in cfg.layer_pattern))
+        if prefill_fn is None:
+            self._bucket_enabled = prefill_bucketing and structurally_ok
+            self._prefill_needs_index = True
+            self.prefill_fn = jax.jit(
+                make_bucketed_prefill_step(cfg, cache_len=max_seq))
+        else:
+            self.prefill_fn = prefill_fn
+            self._prefill_needs_index = bool(prefill_is_bucketed)
+            self._bucket_enabled = (prefill_bucketing and structurally_ok
+                                    and self._prefill_needs_index)
+        # Pad-append must stay within every layer's cache capacity
+        # (sliding-window ring buffers would otherwise evict real tokens
+        # for pads).
+        self._bucket_cap = max_seq
+        if any(k == LOCAL for k in cfg.layer_pattern):
+            self._bucket_cap = min(max_seq, cfg.sliding_window)
+        self._seen_buckets: set = set()
+
+        self.decode_fn = decode_fn or make_decode_step(cfg)
+        self._window_fn = self._build_window_fn()
+
+        self.cache = SlotKVCache(max_batch)
+        # Per-slot host state (mirrors the device-side window carries).
+        self._req: List[Optional[Request]] = [None] * max_batch
+        self._tok = np.zeros(max_batch, np.int32)
+        self._pos = np.zeros(max_batch, np.int32)
+        self._budget = np.zeros(max_batch, np.int32)
+
+        self.queue: Deque[Request] = deque()
+        self._backfilled: Deque[Tuple[Request, Any, int]] = deque()
+
+    # ------------------------------------------------------------------
+    # Jitted multi-token decode window
+    # ------------------------------------------------------------------
+    def _build_window_fn(self):
+        decode_fn = self.decode_fn
+        vocab = self.cfg.vocab_size
+        max_seq = self.max_seq
+        T = self.window
+
+        def decode_window(params, caches, toks, pos, budget, *, rung):
+            """T greedy tokens at batch shape ``rung``; one host sync.
+
+            toks/pos/budget: (rung,) int32 — last emitted token, next
+            write position, and remaining token budget per slot.  Rows
+            with budget <= 0 (holes, finished requests) stay frozen and
+            emit -1; their attention output is computed but discarded,
+            and their (deterministic, value-stable) cache writes land in
+            slots that are either released or fully overwritten at the
+            next admission.
+            """
+            sub = jax.tree.map(
+                lambda x: jax.lax.slice_in_dim(x, 0, rung, axis=1), caches)
+
+            def body(carry, _):
+                c, tk, ps, bd = carry
+                logits, c = decode_fn(params, c, tk[:, None], ps)
+                nxt = jnp.argmax(logits[:, -1, :vocab],
+                                 axis=-1).astype(jnp.int32)
+                live = bd > 0
+                emit = jnp.where(live, nxt, -1)
+                tk = jnp.where(live, nxt, tk)
+                ps = jnp.where(live, ps + 1, ps)
+                bd = jnp.where(live, bd - 1, bd)
+                bd = jnp.where(ps >= max_seq - 1, 0, bd)
+                return (c, tk, ps, bd), emit
+
+            (sub, toks, pos, budget), out = jax.lax.scan(
+                body, (sub, toks, pos, budget), None, length=T)
+            caches = jax.tree.map(
+                lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                    full, s, 0, axis=1), caches, sub)
+            return caches, toks, pos, budget, out
+
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        return jax.jit(decode_window, static_argnames=("rung",),
+                       donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+    # Prefill (bucketed) + admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Enqueue a request for admission."""
+        req.arrived = time.time()
+        self.queue.append(req)
+
+    def _bucket_len(self, s: int) -> Optional[int]:
+        b = _MIN_BUCKET
+        while b < s:
+            b *= 2
+        return b if b <= self._bucket_cap else None
+
+    def _prefill_one(self, req: Request):
+        s = len(req.prompt)
+        if self._bucket_enabled:
+            b = self._bucket_len(s)
+            if b is not None:
+                if b in self._seen_buckets:
+                    self.stats["prefill_bucket_hits"] += 1
+                else:
+                    self._seen_buckets.add(b)
+                    self.stats["prefill_bucket_misses"] += 1
+                padded = np.zeros(b, np.int32)
+                padded[:s] = req.prompt
+                tokens = padded[None]
+            else:
+                # Bucket would overflow a cache capacity: exact length.
+                self.stats["prefill_bucket_misses"] += 1
+                tokens = np.asarray(req.prompt[None], np.int32)
+            batch = {"tokens": jnp.asarray(tokens),
+                     "last_index": jnp.int32(s - 1)}
+        else:
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            if self._prefill_needs_index:
+                batch["last_index"] = jnp.int32(s - 1)
+        logits, cache = self.prefill_fn(self.params, batch)
+        note_first_token(req, logits, self.cfg.vocab_size, self.stats)
+        return cache, s
+
+    def _backfill_one(self, req: Request) -> None:
+        """One deferred (co-scheduled) prefill at a window boundary; the
+        request parks decode-ready for the next admission."""
+        cache, pos = self._prefill_one(req)
+        self._backfilled.append((req, cache, pos))
+        self.stats["backfilled"] += 1
+
+    def _n_active(self) -> int:
+        return sum(r is not None for r in self._req)
+
+    def _admit(self) -> None:
+        """Fill free slots up to the SISA ladder target.
+
+        Backfilled requests are admitted first (their prefill already
+        ran — re-running it would double-book its GEMMs against the
+        ladder), then fresh queue requests are prefilled into slots.
+        """
+        n_live = self._n_active() + len(self.queue) + len(self._backfilled)
+        if n_live == 0:
+            return
+        target = choose_decode_batch(n_live, self.cfg, self.max_batch)
+        target = max(1, min(target or 1, self.max_batch))
+        self.stats["batches"].append(min(target, n_live))
+        while (self._n_active() < target and self.cache.n_free
+               and (self._backfilled or self.queue)):
+            if self._backfilled:
+                req, cache, pos = self._backfilled.popleft()
+            else:
+                req = self.queue.popleft()
+                cache, pos = self._prefill_one(req)
+            slot = self.cache.acquire()
+            self.cache.write(cache, slot)
+            self._req[slot] = req
+            self._tok[slot] = req.generated[-1]
+            self._pos[slot] = pos
+            # generated already holds the prefill token; match the
+            # sequential engine's stop rule (>= max_new_tokens after at
+            # least one decode step).
+            self._budget[slot] = max(1, req.max_new_tokens
+                                     - len(req.generated))
+            self.stats["slot_admits"] += 1
+
+    def _current_rung(self) -> int:
+        highest = max((i + 1 for i, r in enumerate(self._req)
+                       if r is not None), default=0)
+        if highest == 0:
+            return 0
+        return next(r for r in self.rungs if r >= highest)
+
+    # ------------------------------------------------------------------
+    # Serve loop
+    # ------------------------------------------------------------------
+    def _run_window(self, rung: int, finished: List[Request]) -> None:
+        toks = jnp.asarray(self._tok[:rung])
+        pos = jnp.asarray(self._pos[:rung])
+        budget = jnp.asarray(self._budget[:rung])
+        self.cache.buffers, toks, pos, budget, out = self._window_fn(
+            self.params, self.cache.buffers, toks, pos, budget, rung=rung)
+        self.stats["decode_compiles"] = jit_cache_entries(self._window_fn)
+        self.stats["windows"] += 1
+        self.stats["rungs"].append(rung)
+        self.stats["decode_steps"] += self.window
+        # The single host sync of the window:
+        out_np = np.asarray(out)                         # (T, rung)
+        self._tok[:rung] = np.asarray(toks)
+        self._pos[:rung] = np.asarray(pos)
+        self._budget[:rung] = np.asarray(budget)
+        for slot in range(rung):
+            req = self._req[slot]
+            if req is None:
+                continue
+            col = out_np[:, slot]
+            req.generated.extend(int(t) for t in col[col >= 0])
+            if self._budget[slot] <= 0:
+                req.done = True
+                finished.append(req)
+                self._req[slot] = None
+                self.cache.release(slot)
+                self.stats["slot_releases"] += 1
+
+    def _plan_step(self) -> int:
+        """Multi-tenant co-schedule of this window (stats + backfill
+        count) — the same shared accounting the sequential engine uses
+        (:func:`repro.serve.engine.record_step_packing`)."""
+        if not self.multi_tenant or not self.queue:
+            # Nothing waiting -> nothing to co-schedule; skip the packer
+            # simulation on the drain tail (it runs once per window
+            # here, not once per batch as in the sequential engine).
+            return 0
+        waiting = [len(r.prompt) for r in self.queue]
+        return record_step_packing(self.stats, self._n_active(), waiting,
+                                   self.cfg, bool(self.coexec_backend))
+
+    def run(self, max_steps: int = 512) -> List[Request]:
+        """Serve everything in the queue (greedy decoding).
+
+        ``max_steps`` counts decode iterations like the sequential
+        engine; the slot engine consumes them ``window`` at a time.
+        """
+        finished: List[Request] = []
+        while ((self.queue or self._backfilled or self._n_active())
+               and max_steps > 0):
+            self._admit()
+            n_pre = self._plan_step()
+            to_backfill: List[Request] = []
+            if self.coexec_backend and self.multi_tenant:
+                nb = min(n_pre, len(self.queue))
+                to_backfill = [self.queue.popleft() for _ in range(nb)]
+            rung = self._current_rung()
+            if rung:
+                self._run_window(rung, finished)
+                max_steps -= self.window
+            else:
+                max_steps -= 1
+            # Co-scheduled prefills run at the window boundary (the
+            # fused grid interleaves them with the decode window on the
+            # array; at the host level they fill the sync gap).
+            for r in to_backfill:
+                self._backfill_one(r)
+        return finished

@@ -153,29 +153,44 @@ class TestCoexecKernel:
 
 
 class TestEngineCoexec:
-    def _run_engine(self, coexec_backend):
+    def _run_engine(self, coexec_backend, engine="legacy"):
         import jax
 
         from repro.configs import smoke_config
         from repro.models import init_params
-        from repro.serve import Request, ServeEngine
-        from repro.serve.serve_step import (make_decode_step,
+        from repro.serve import Request, ServeEngine, SlotServeEngine
+        from repro.serve.serve_step import (make_bucketed_prefill_step,
+                                            make_decode_step,
                                             make_prefill_step)
         cfg = smoke_config("yi-6b")
         params = init_params(cfg, jax.random.PRNGKey(0))
-        prefill = jax.jit(make_prefill_step(cfg, cache_len=64))
-        decode = jax.jit(make_decode_step(cfg))
         counts = {}
 
-        def counted_prefill(p, batch):
-            rid = int(np.asarray(batch["tokens"]).sum())  # content key
-            counts[rid] = counts.get(rid, 0) + 1
-            return prefill(p, batch)
+        if engine == "legacy":
+            prefill = jax.jit(make_prefill_step(cfg, cache_len=64))
 
-        eng = ServeEngine(cfg, params, prefill_fn=counted_prefill,
-                          decode_fn=decode, cache_init_fn=None,
-                          max_batch=2, max_seq=64,
-                          coexec_backend=coexec_backend)
+            def counted_prefill(p, batch):
+                rid = int(np.asarray(batch["tokens"]).sum())  # content key
+                counts[rid] = counts.get(rid, 0) + 1
+                return prefill(p, batch)
+
+            eng = ServeEngine(cfg, params, prefill_fn=counted_prefill,
+                              decode_fn=jax.jit(make_decode_step(cfg)),
+                              cache_init_fn=None, max_batch=2, max_seq=64,
+                              coexec_backend=coexec_backend)
+        else:
+            prefill = jax.jit(make_bucketed_prefill_step(cfg, cache_len=64))
+
+            def counted_prefill(p, batch):
+                # Padding is all-zeros, so the content key is unchanged.
+                rid = int(np.asarray(batch["tokens"]).sum())
+                counts[rid] = counts.get(rid, 0) + 1
+                return prefill(p, batch)
+
+            eng = SlotServeEngine(cfg, params, prefill_fn=counted_prefill,
+                                  prefill_is_bucketed=True, max_batch=2,
+                                  max_seq=64, window=4,
+                                  coexec_backend=coexec_backend)
         rng = np.random.default_rng(0)
         for i in range(5):
             eng.submit(Request(rid=i, prompt=rng.integers(
@@ -201,6 +216,33 @@ class TestEngineCoexec:
         assert stats["coexec_tiles"]
         assert all(n > 0 for n in stats["coexec_tiles"])
         assert len(stats["coexec_interleave"]) == len(stats["coexec_tiles"])
+
+    def test_slot_engine_tokens_match_sequential(self):
+        """The slot engine (with and without coexec backfill) generates
+        exactly the sequential engine's tokens on the equivalence
+        workload, with one prefill per request."""
+        seq_tokens, _, _ = self._run_engine(None)
+        slot_tokens, slot_counts, slot_stats = self._run_engine(
+            None, engine="slot")
+        co_tokens, co_counts, co_stats = self._run_engine(
+            "pallas_interpret", engine="slot")
+        assert slot_tokens == seq_tokens
+        assert co_tokens == seq_tokens
+        assert len(slot_tokens) == 5
+        # One prefill per request on both slot paths (backfill admits
+        # from the parked cache, never re-prefills).
+        assert all(c == 1 for c in slot_counts.values()), slot_counts
+        assert all(c == 1 for c in co_counts.values()), co_counts
+        assert sum(co_counts.values()) == 5
+        # Backfill really rode the decode windows, and each step lowered
+        # its placement to the fused grid-task order.
+        assert co_stats["backfilled"] > 0
+        assert co_stats["coexec_tiles"]
+        assert all(n > 0 for n in co_stats["coexec_tiles"])
+        # Ladder-locked decode: at most one compile per rung used.
+        if slot_stats["decode_compiles"] is not None:
+            assert (slot_stats["decode_compiles"]
+                    <= len(set(slot_stats["rungs"])))
 
     def test_backfilled_requests_counted_live_not_waiting(self):
         """The step after a backfill must quantize its ladder over the
