@@ -13,8 +13,12 @@ lint:
 docs:
 	$(PY) scripts/check_docs.py
 
+# HYPOTHESIS_PROFILE=ci: deterministic seed, bounded example budget for
+# the property suites (incl. the cross-engine serve fuzz harness);
+# profiles are registered in tests/conftest.py for both the real
+# hypothesis package and the hermetic fallback shim.
 test:
-	$(PY) -m pytest -x -q -m "not slow"
+	HYPOTHESIS_PROFILE=ci $(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
 	$(PY) -m benchmarks.run --quick --json artifacts/bench-smoke.json

@@ -9,6 +9,9 @@ scheduler's batch choices.  The same workload is then replayed on the
 ladder-locked slot engine (repro.serve.slot_engine) — persistent slot
 cache, fixed decode shapes, multi-token windows — which must generate
 identical tokens with at most one decode compile per ladder rung.
+Finally the paged engine (repro.serve.paged_engine) serves it again
+from a page pool at three-eighths of the dense slot reservation:
+identical tokens, a fraction of the resident KV bytes.
 """
 import sys
 sys.path.insert(0, "src")
@@ -92,6 +95,35 @@ def main():
     assert counts_ok and len(done_slot) == len(lengths)
     if st["decode_compiles"] is not None:
         assert st["decode_compiles"] <= len(set(st["rungs"]))
+
+    # Same workload again on paged storage: the dense slot engine's
+    # reservation is 8 slots x 96 positions = 64 pages of 12; a 24-page
+    # pool is 0.375x that.  Tokens must be identical to the slot
+    # engine on any workload — rows are independent in both.
+    from repro.serve import PagedServeEngine
+    paged = PagedServeEngine(cfg, params, max_batch=8, max_seq=96,
+                             window=8, page_size=12, num_pages=24)
+    rng = np.random.default_rng(0)
+    for i, L in enumerate(lengths):
+        paged.submit(Request(
+            rid=i, prompt=rng.integers(2, cfg.vocab_size,
+                                       size=L).astype(np.int32),
+            max_new_tokens=8))
+    t0 = time.time()
+    done_paged = paged.run(max_steps=256)
+    dt_paged = time.time() - t0
+    pt = paged.stats
+    ratio = (paged.cache.resident_bytes()
+             / max(slot.cache.resident_bytes(), 1))
+    print(f"[paged] completed {len(done_paged)}/{len(lengths)} requests "
+          f"in {dt_paged*1e3:.0f}ms host time; resident KV "
+          f"{ratio:.2f}x slot engine ({pt['pool_pages']}-page pool, "
+          f"peak {pt['pages_mapped_peak']} mapped, "
+          f"{pt['page_grows']} boundary grows)")
+    same_paged = ({r.rid: tuple(r.generated) for r in done_paged}
+                  == {r.rid: tuple(r.generated) for r in done_slot})
+    print(f"[paged] tokens identical to slot engine: {same_paged}")
+    assert same_paged and ratio < 0.6
 
 
 if __name__ == "__main__":

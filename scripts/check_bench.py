@@ -13,8 +13,14 @@ Policy (tuned for noisy shared CI runners):
   where both sides are first clamped up to ``--floor-us`` so that
   micro-benchmarks in the single-digit-microsecond range (pure jit
   dispatch) cannot trip the gate on scheduler jitter;
+* *metric* rows (counts/ratios encoded as ``us_per_call`` — compile
+  counts, resident-KV ratios) additionally carry an absolute ceiling in
+  ``HARD_MAX_US``: they are deterministic, so any growth is a real
+  regression, never timer noise, and the ceiling applies even when the
+  committed baseline would allow ``tol x`` headroom;
 * new benchmarks (present only in the current run) pass — they join the
-  gate when the baseline is regenerated.
+  ratio gate when the baseline is regenerated (hard ceilings apply
+  immediately).
 
 Regenerate the baseline after an intentional perf change with:
     PYTHONPATH=src python -m benchmarks.run --quick --json \
@@ -25,6 +31,19 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# Absolute ceilings for deterministic metric rows (value semantics are
+# documented next to the row's bench).  Kept here rather than in
+# baseline.json so `make bench-baseline` regeneration cannot relax them.
+HARD_MAX_US = {
+    # compile counts x 10_000: <= 2 decode compiles on the quick ladder
+    "serve_slot_compiles": 20_000.0,
+    "serve_paged_compiles": 30_000.0,   # long mix passes through 3 rungs
+    # paged/dense resident-KV-byte ratio x 1000: the paged engine must
+    # keep the long-context mixed workload under 0.6x the dense slot
+    # engine's residency (ISSUE 5 acceptance bound).
+    "serve_paged_kv_bytes": 600.0,
+}
 
 
 def load(path: str) -> dict:
@@ -59,6 +78,19 @@ def main() -> int:
         if ratio > args.tol:
             failures.append(f"{name}: {ratio:.2f}x baseline "
                             f"(tol {args.tol:.2f}x)")
+    for name, ceiling in sorted(HARD_MAX_US.items()):
+        if name not in cur:
+            continue     # coverage is checked against the baseline above
+        val = float(cur[name]["us_per_call"])
+        if val != val or val < 0:     # NaN / sentinel: metric vanished
+            failures.append(f"{name}: metric value {val} is not a valid "
+                            "measurement — the gated counter degraded")
+        elif val > ceiling:
+            failures.append(f"{name}: {val:.1f} exceeds hard ceiling "
+                            f"{ceiling:.1f} (metric row — not noise)")
+        else:
+            lines.append(f"{'hard-ok':>10}  {name:<32} {val:>10.1f}us"
+                         f"  ceiling  {ceiling:>10.1f}us")
     new = sorted(set(cur) - set(base))
     print(f"bench gate: {len(base)} baselined, {len(new)} new, "
           f"tol {args.tol:.1f}x (floor {args.floor_us:.0f}us)")

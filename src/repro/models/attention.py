@@ -356,6 +356,67 @@ def attn_decode_step(p, x: Array, cache: Dict[str, Array], pos: Array,
     return linear_apply(p["o"], out), new_cache
 
 
+def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
+                           page_table: Array, pos: Array, cfg, *,
+                           sharder: Sharder = IDENTITY_SHARDER
+                           ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token step against block-granular paged KV storage.
+
+    ``cache`` holds this layer's slice of the shared page pool:
+    ``{"pk": (n_pages, page_size, Hkv, hd), "pv": ...}`` — a flat pool of
+    fixed-size sequence blocks with no per-request ``max_seq``
+    reservation.  ``page_table`` is the per-row indirection
+    ``(B, max_pages_per_slot) int32``: logical page ``j`` of row ``i``
+    lives at physical page ``page_table[i, j]``.  ``pos`` is the per-row
+    ``(B,)`` write position (the paged engine always decodes with
+    per-slot positions).
+
+    The new token's K/V is scattered through the table (row ``i`` writes
+    physical cell ``(table[i, pos_i // P], pos_i % P)`` — one O(B) store,
+    page ownership is exclusive so rows never collide), then K/V is
+    gathered back through the table into ``(B, max_pages * P, ...)``
+    logical order.  The per-row ring mask validates logical positions
+    ``<= pos_i`` only, so unmapped table entries (released rows point at
+    the pool's sink page, live rows' tail entries are beyond their
+    mapped span) are gathered but never attended — exactly the slot
+    engine's stale-K/V invariant, page-granular.
+    """
+    if CACHE_QUANT["enabled"]:
+        raise NotImplementedError(
+            "paged decode does not support the quantized KV cache yet")
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    psz = cache["pk"].shape[1]
+    pos = jnp.asarray(pos)
+    assert pos.ndim == 1, "paged decode requires per-row (B,) positions"
+    positions = pos[:, None]
+    q = _split_heads(linear_apply(p["q"], x), cfg.n_heads)
+    k = _split_heads(linear_apply(p["k"], x), cfg.n_kv_heads)
+    v = _split_heads(linear_apply(p["v"], x), cfg.n_kv_heads)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b)
+    phys = page_table[rows, pos // psz]              # (B,) physical pages
+    off = pos % psz
+    pk = cache["pk"].at[phys, off].set(k[:, 0])
+    pv = cache["pv"].at[phys, off].set(v[:, 0])
+    pk = sharder.constrain(pk, "kv_cache")
+    pv = sharder.constrain(pv, "kv_cache")
+    new_cache = {"pk": pk, "pv": pv}
+    # Gather each row's pages back into logical sequence order.  The
+    # transient (B, max_pages, P, ...) view is attention's working set —
+    # the *persistent* pool stays flat and shared.
+    kd = pk[page_table].reshape(b, -1, cfg.n_kv_heads, hd)
+    vd = pv[page_table].reshape(b, -1, cfg.n_kv_heads, hd)
+    j = jnp.arange(kd.shape[1])
+    mask = (j[None, :] <= pos[:, None])[:, None, None, :]   # (B,1,1,Skv)
+    kk = _repeat_kv(kd, cfg.n_heads // cfg.n_kv_heads)
+    vv = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
+    out = _sdpa(q, kk, vv, mask, sharder)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return linear_apply(p["o"], out), new_cache
+
+
 def cross_attn_decode(p, x: Array, cross_kv: Dict[str, Array], cfg,
                       sharder: Sharder = IDENTITY_SHARDER) -> Array:
     """Decoder cross-attention against a static encoder KV."""

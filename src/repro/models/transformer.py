@@ -368,10 +368,16 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
 
 
 def _block_decode(p, x, cache, pos, kind, cfg, *, sharder,
-                  mesh=None, batch_axes=()):
+                  mesh=None, batch_axes=(), page_table=None):
     h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     self_cache = cache["self"] if "cross" in p else cache
-    if kind in (ATTN, LOCAL, BIDIR):
+    if kind in (ATTN, LOCAL, BIDIR) and "pk" in self_cache:
+        # Paged layer: the cache leaf is this layer's slice of the
+        # shared page pool; indirection goes through ``page_table``.
+        mix, new_cache = attn.paged_attn_decode_step(
+            p["mixer"], h, self_cache, page_table, pos, cfg,
+            sharder=sharder)
+    elif kind in (ATTN, LOCAL, BIDIR):
         mix, new_cache = attn.attn_decode_step(
             p["mixer"], h, self_cache, pos, cfg, kind=kind, sharder=sharder)
     elif kind == RGLRU:
@@ -398,10 +404,16 @@ def _block_decode(p, x, cache, pos, kind, cfg, *, sharder,
 def forward_decode(params, cfg: ModelConfig, tokens: Array,
                    caches: List[PyTree], pos: Array, *,
                    sharder: Sharder = IDENTITY_SHARDER, mesh=None,
-                   batch_axes=()) -> Tuple[Array, List[PyTree]]:
+                   batch_axes=(), page_table: Optional[Array] = None
+                   ) -> Tuple[Array, List[PyTree]]:
     """One decode step. tokens: (B, 1); pos: scalar position index, or a
     (B,) vector of per-row positions (slot-engine decode — see
-    :func:`repro.models.attention.attn_decode_step`)."""
+    :func:`repro.models.attention.attn_decode_step`).
+
+    With ``page_table`` set, attention cache leaves are expected to be
+    page pools (``{"pk", "pv"}`` with leading layer axis, scanned like
+    dense caches) and each layer resolves K/V through the shared table
+    (:func:`repro.models.attention.paged_attn_decode_step`)."""
     x = embedding_lookup(params["embed"], tokens)
     x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
     x = sharder.constrain(x, "hidden_decode")
@@ -415,7 +427,8 @@ def forward_decode(params, cfg: ModelConfig, tokens: Array,
             for i, kind in enumerate(pattern):
                 x, c = _block_decode(layer_p[f"b{i}"], x, layer_c[f"b{i}"],
                                      pos, kind, cfg, sharder=sharder,
-                                     mesh=mesh, batch_axes=batch_axes)
+                                     mesh=mesh, batch_axes=batch_axes,
+                                     page_table=page_table)
                 new_c[f"b{i}"] = c
             return x, new_c
         x, new_cache = jax.lax.scan(body, x, (gp, cache))

@@ -1,8 +1,11 @@
 from repro.serve.engine import choose_decode_batch, Request, ServeEngine
+from repro.serve.paged_engine import PagedKVCache, PagedServeEngine
 from repro.serve.serve_step import (cache_specs, make_bucketed_prefill_step,
-                                    make_decode_step, make_prefill_step)
+                                    make_decode_step, make_paged_decode_step,
+                                    make_prefill_step)
 from repro.serve.slot_engine import SlotKVCache, SlotServeEngine
 
 __all__ = ["cache_specs", "make_bucketed_prefill_step", "make_decode_step",
-           "make_prefill_step", "Request", "ServeEngine", "SlotKVCache",
+           "make_paged_decode_step", "make_prefill_step", "PagedKVCache",
+           "PagedServeEngine", "Request", "ServeEngine", "SlotKVCache",
            "SlotServeEngine", "choose_decode_batch"]

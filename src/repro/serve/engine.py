@@ -97,21 +97,31 @@ def _rung_cycles(cfg: ModelConfig, rung: int) -> float:
 
 
 def choose_decode_batch(n_live: int, cfg: ModelConfig,
-                        max_batch: int = 128) -> int:
+                        max_batch: int = 128, *,
+                        admit_cap: Optional[int] = None) -> int:
     """SISA-aware batch quantization: pick the ladder size minimizing
     predicted cycles-per-token (simulator-driven, not a heuristic).
-    The per-rung simulation is cached on ``(cfg, rung)``."""
+    The per-rung simulation is cached on ``(cfg, rung)``.
+
+    ``admit_cap`` is the page-budget constraint of the paged engine: at
+    most this many requests can actually be resident (live rows plus
+    whatever the page pool can still reserve worst-case), so rungs
+    larger than it only buy masked holes — the sweep counts served
+    requests as ``min(n_live, b, admit_cap)`` and admission can never
+    over-commit the pool chasing a bigger rung.
+    """
     if n_live <= 0:
         return 0
+    cap = n_live if admit_cap is None else min(n_live, max(admit_cap, 1))
     best_b, best_cpt = None, float("inf")
     for b in SLAB_LADDER:
         if b > max_batch:
             break
-        served = min(n_live, b)
+        served = min(cap, b)
         cpt = _rung_cycles(cfg, b) / served
         if cpt < best_cpt - 1e-9:
             best_b, best_cpt = b, cpt
-        if b >= n_live:
+        if b >= cap:
             break
     return best_b
 
@@ -227,6 +237,7 @@ class ServeEngine:
         self.stats: Dict[str, Any] = init_serve_stats(coexec_backend,
                                                       expert_backend)
         self.coexec_backend = coexec_backend
+        self._expert_backend = expert_backend
         self.queue: Deque[Request] = deque()
         # (request, prefilled cache, position): prefills completed via
         # backfill, awaiting decode admission.
@@ -235,6 +246,18 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         req.arrived = time.time()
         self.queue.append(req)
+
+    def reset(self) -> None:
+        """Clear queues and stats for a fresh serve on the same engine.
+
+        The jitted ``prefill_fn``/``decode_fn`` keep their compile
+        caches, so a long-lived engine (or a fuzz harness running many
+        workloads) pays tracing/compilation once, not per serve.
+        """
+        self.queue.clear()
+        self._backfilled.clear()
+        self.stats = init_serve_stats(self.coexec_backend,
+                                      self._expert_backend)
 
     def _prefill_one(self, req: Request):
         s = len(req.prompt)

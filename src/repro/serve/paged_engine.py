@@ -1,0 +1,432 @@
+"""Paged serving: block-granular KV storage behind the ladder-locked loop.
+
+:class:`~repro.serve.slot_engine.SlotServeEngine` removed the serving
+loop's recompiles but kept the slot cache dense: every slot reserves the
+full ``max_seq`` sequence capacity, so one long-context tenant dictates
+the memory footprint of every co-resident request — exactly the
+worst-case over-provisioning the paper's scale-in argument is against.
+This module applies the SISA idea to serving memory:
+
+* **Flat page pool** (:class:`PagedKVCache`): KV lives in
+  ``(layers, num_pages, page_size, ...)`` buffers shared by all
+  requests, plus one reserved *sink* page (index ``num_pages``) that
+  absorbs the masked writes of released rows.  A request holds exactly
+  the pages its sequence occupies, so a 4k-token tenant and a 30-token
+  tenant stop paying the same rent.
+
+* **Per-slot page table**: a fixed-shape
+  ``(max_slots, max_pages_per_slot) int32`` indirection from logical
+  sequence blocks to physical pages.  Admission maps
+  ``ceil(padded_prompt / page_size)`` pages with a single donated
+  scatter of the prefilled cache; decode *appends* a page only when a
+  row's write position crosses a page boundary (entries are written,
+  shapes never change, so growth never recompiles anything); release
+  returns the pages to the free list and points the row at the sink.
+
+* **Reservation-based admission**: at admit time a request *reserves*
+  its worst case ``ceil(min(max(padded_prompt, prompt + budget),
+  max_seq) / page_size)`` pages (usually far below the dense engine's
+  ``max_seq`` — budgets are small) without mapping them.  Lazy boundary
+  mapping then can never find the free list empty, decode never stalls
+  or deadlocks, and :func:`repro.serve.engine.choose_decode_batch`'s
+  ``admit_cap`` keeps the ladder sweep from targeting a rung the pool
+  cannot back.
+
+The serve loop, ladder quantization, multi-token window, bucketed
+prefill, and coexec backfill are inherited from ``SlotServeEngine``
+unchanged; only storage and the decode step differ
+(:func:`repro.models.attention.paged_attn_decode_step` gathers K/V
+through the table with a per-row ring mask).  Rows stay independent, so
+the paged engine is token-identical to the slot engine on every
+workload — fuzzed across random workloads in
+``tests/test_serve_differential.py``.
+
+Scope: pure global-attention stacks (every layer ``attn``, no MoE /
+enc-dec / frontend, unquantized cache).  Sliding-window rings are
+already bounded by their window and recurrent states have no sequence
+axis — paging them is the ROADMAP follow-up, not a prerequisite.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models.attention import CACHE_QUANT
+from repro.serve.engine import Request
+from repro.serve.serve_step import make_paged_decode_step
+from repro.serve.slot_engine import SlotServeEngine
+
+PyTree = Any
+
+
+def _rename_kv(tree):
+    """Prefill cache ``{"k","v"}`` leaves -> pool ``{"pk","pv"}`` keys.
+
+    The decode path dispatches a layer to the paged attention step by
+    the presence of ``"pk"`` in its cache dict, so the pool pytree must
+    carry the paged key names while keeping the group/layer structure
+    of the dense cache.
+    """
+    if isinstance(tree, dict):
+        ren = {"k": "pk", "v": "pv"}
+        return {ren.get(k, k): _rename_kv(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_rename_kv(t) for t in tree]
+    return tree
+
+
+class PagedKVCache:
+    """Flat page pool + per-slot page table + free-list allocator.
+
+    Physical storage is ``(L, num_pages + 1, page_size, ...)`` per cache
+    leaf (the ``+1`` is the sink page) with one shared logical->physical
+    table ``(max_slots, max_pages_per_slot) int32`` across layers.
+    The allocator is reservation-based: ``admit`` maps the prompt's
+    pages and reserves the request's worst case; ``ensure_capacity``
+    lazily maps pages up to a position (never beyond the reservation,
+    so the free list cannot underflow); ``release`` frees the slot's
+    pages and points its table row at the sink so the masked writes of
+    a released row can never corrupt a page that was reused.
+    """
+
+    def __init__(self, max_slots: int, num_pages: int, page_size: int,
+                 max_pages_per_slot: int):
+        if num_pages < max_pages_per_slot:
+            raise ValueError(
+                f"pool of {num_pages} pages cannot hold one full-length "
+                f"request ({max_pages_per_slot} pages)")
+        self.max_slots = max_slots
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        self.sink = num_pages                      # physical sink page id
+        self.pools: Optional[PyTree] = None        # built at first admit
+        self.table = jnp.full((max_slots, max_pages_per_slot), self.sink,
+                              jnp.int32)
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+        self._free_pages = list(range(num_pages - 1, -1, -1))  # pop->lowest
+        self._mapped: List[List[int]] = [[] for _ in range(max_slots)]
+        self._reserved = [0] * max_slots
+        self.reserved_total = 0
+
+        donate = () if jax.default_backend() == "cpu" else (0, 1)
+        psz = page_size
+
+        def admit_op(pools, table, chunks, pages, slot):
+            pools = jax.tree.map(
+                lambda b, c: b.at[:, pages].set(
+                    c.reshape((c.shape[0], -1, psz) + c.shape[3:])),
+                pools, chunks)
+            return pools, jax.lax.dynamic_update_slice(
+                table, pages[None], (slot, jnp.int32(0)))
+
+        self._admit_op = jax.jit(admit_op, donate_argnums=donate)
+        self._grow_op = jax.jit(
+            lambda table, pages, slot, start: jax.lax.dynamic_update_slice(
+                table, pages[None], (slot, start)),
+            donate_argnums=() if jax.default_backend() == "cpu" else (0,))
+        self._clear_op = jax.jit(
+            lambda table, slot: jax.lax.dynamic_update_slice(
+                table, jnp.full((1, max_pages_per_slot), self.sink,
+                                jnp.int32), (slot, jnp.int32(0))),
+            donate_argnums=() if jax.default_backend() == "cpu" else (0,))
+
+    # -- slot free list (same discipline as SlotKVCache) ---------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    def acquire(self) -> int:
+        """Claim the lowest free slot (keeps the ladder rung minimal)."""
+        return self._free_slots.pop()
+
+    def can_reserve(self, n_pages: int) -> bool:
+        """True iff the pool can still back ``n_pages`` worst-case
+        pages on top of every live request's reservation."""
+        return self.num_pages - self.reserved_total >= n_pages
+
+    def mapped_pages(self, slot: int) -> List[int]:
+        """Physical pages currently mapped by ``slot`` (logical order)."""
+        return list(self._mapped[slot])
+
+    def reserved_pages(self, slot: int) -> int:
+        """Worst-case page reservation held by ``slot``."""
+        return self._reserved[slot]
+
+    # -- page lifecycle -------------------------------------------------
+    def admit(self, prefill_cache: PyTree, slot: int,
+              reserve_pages: int) -> int:
+        """Map a prefilled cache into ``slot`` and reserve its worst case.
+
+        The cache's sequence capacity must be page-aligned (the paged
+        engine buckets prompts to page multiples); its
+        ``ceil(prompt_pages)`` chunks are scattered into freshly mapped
+        physical pages with one donated jitted update that also writes
+        the slot's table row.  Returns the number of pages mapped.
+        """
+        leaves = jax.tree.leaves(prefill_cache)
+        cap = leaves[0].shape[2]
+        if cap % self.page_size:
+            raise ValueError(f"prefill cache capacity {cap} is not a "
+                             f"multiple of page_size {self.page_size}")
+        n = cap // self.page_size
+        if n > self.max_pages_per_slot:
+            raise ValueError(f"prompt needs {n} pages > max_pages_per_slot "
+                             f"{self.max_pages_per_slot}")
+        if reserve_pages < n or not self.can_reserve(reserve_pages):
+            raise ValueError(
+                f"cannot reserve {reserve_pages} pages (mapped now: {n}, "
+                f"unreserved: {self.num_pages - self.reserved_total})")
+        renamed = _rename_kv(prefill_cache)
+        if self.pools is None:
+            self.pools = jax.tree.map(
+                lambda x: jnp.zeros(
+                    x.shape[:1] + (self.num_pages + 1, self.page_size)
+                    + x.shape[3:], x.dtype),
+                renamed)
+        pages = [self._free_pages.pop() for _ in range(n)]
+        self.pools, self.table = self._admit_op(
+            self.pools, self.table, renamed,
+            jnp.asarray(pages, jnp.int32), jnp.int32(slot))
+        self._mapped[slot] = pages
+        self._reserved[slot] = reserve_pages
+        self.reserved_total += reserve_pages
+        return n
+
+    def ensure_capacity(self, slot: int, last_pos: int) -> int:
+        """Map pages so ``slot`` can write through ``last_pos``.
+
+        Called at window boundaries for the positions the next decode
+        window will write; within the admission reservation by
+        construction, so the pop below can never find the free list
+        empty.  Returns the number of pages appended (0 almost always —
+        only boundary crossings grow the table).
+        """
+        need = last_pos // self.page_size + 1
+        have = len(self._mapped[slot])
+        if need <= have:
+            return 0
+        if need > self._reserved[slot]:
+            raise AssertionError(
+                f"slot {slot} needs {need} pages beyond its reservation "
+                f"of {self._reserved[slot]} — admission under-reserved")
+        pages = [self._free_pages.pop() for _ in range(need - have)]
+        self.table = self._grow_op(self.table,
+                                   jnp.asarray(pages, jnp.int32),
+                                   jnp.int32(slot), jnp.int32(have))
+        self._mapped[slot].extend(pages)
+        return len(pages)
+
+    def release(self, slot: int) -> None:
+        """Free the slot and its pages; the table row is pointed at the
+        sink page so the released row's masked decode writes can never
+        land in a page a later admission reuses."""
+        self._free_pages.extend(self._mapped[slot])
+        self._free_pages.sort(reverse=True)
+        self._mapped[slot] = []
+        self.reserved_total -= self._reserved[slot]
+        self._reserved[slot] = 0
+        self.table = self._clear_op(self.table, jnp.int32(slot))
+        self._free_slots.append(slot)
+        self._free_slots.sort(reverse=True)
+
+    def reset(self) -> None:
+        """Free every slot and page; pool buffers (and stale content —
+        never attended, admission re-maps pages) are kept."""
+        self._free_slots = list(range(self.max_slots - 1, -1, -1))
+        self._free_pages = list(range(self.num_pages - 1, -1, -1))
+        self._mapped = [[] for _ in range(self.max_slots)]
+        self._reserved = [0] * self.max_slots
+        self.reserved_total = 0
+        self.table = jnp.full((self.max_slots, self.max_pages_per_slot),
+                              self.sink, jnp.int32)
+
+    def resident_bytes(self) -> int:
+        """Bytes of persistent paged storage: pool (incl. sink page) +
+        page table (0 until the first admission shapes the pool)."""
+        if self.pools is None:
+            return 0
+        return (sum(x.nbytes for x in jax.tree.leaves(self.pools))
+                + self.table.nbytes)
+
+
+class PagedServeEngine(SlotServeEngine):
+    """Ladder-locked serving over block-granular paged KV storage.
+
+    Drop-in peer of :class:`~repro.serve.slot_engine.SlotServeEngine`
+    (token-identical on every workload — rows are independent in both)
+    whose cache footprint scales with the tokens actually resident, not
+    with ``max_batch x max_seq``.  ``num_pages`` sizes the pool; the
+    default matches the dense engine's capacity, and the interesting
+    deployments shrink it (a pool a fraction of the dense size serves
+    long-context + many-short mixes the dense engine cannot fit —
+    ``benchmarks/serve_bench.py``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 max_batch: int = 8, max_seq: int = 256, **kw):
+        if (cfg.enc_dec or cfg.moe is not None or cfg.frontend is not None
+                or any(k != ATTN for k in cfg.layer_pattern)):
+            raise ValueError(
+                "PagedServeEngine supports pure global-attention stacks; "
+                f"{cfg.name} has pattern {cfg.layer_pattern} "
+                "(sliding-window rings are already window-bounded and "
+                "recurrent states have no sequence axis — see ROADMAP)")
+        if CACHE_QUANT["enabled"]:
+            raise NotImplementedError(
+                "paged storage does not support the quantized KV cache yet")
+        if page_size < 1 or page_size > max_seq:
+            raise ValueError(f"page_size {page_size} not in [1, {max_seq}]")
+        self.page_size = page_size
+        self.max_pages_per_slot = -(-max_seq // page_size)
+        self.num_pages = (num_pages if num_pages is not None
+                          else max_batch * self.max_pages_per_slot)
+        super().__init__(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                         **kw)
+        # Page-aligned prefill caches are a storage invariant here, not
+        # an optimization: an exact-length prefill cache cannot be
+        # scattered into whole pages, so the bucketed path is mandatory
+        # (reject at construction, not at the first admission).
+        if not self._bucket_enabled:
+            raise ValueError(
+                "PagedServeEngine requires bucketed prefill (page-aligned "
+                "cache capacities); prefill_bucketing=False or a "
+                "non-bucketed prefill_fn cannot be paged")
+
+    # -- storage/decode hooks ------------------------------------------
+    def _stats_extras(self) -> dict:
+        extras = super()._stats_extras()
+        extras.update({"page_admits": 0, "page_grows": 0,
+                       "pages_mapped_peak": 0,
+                       "pool_pages": self.num_pages})
+        return extras
+
+    def _prefill_cache_len(self) -> Optional[int]:
+        # None: the prefilled cache capacity equals the padded prompt
+        # length (a page multiple via _bucket_len) — the admit scatter
+        # maps exactly ceil(prompt / page) pages, not max_seq.
+        return None
+
+    def _default_decode_fn(self):
+        return make_paged_decode_step(self.cfg)
+
+    def _make_cache(self):
+        return PagedKVCache(self.max_batch, self.num_pages, self.page_size,
+                            self.max_pages_per_slot)
+
+    def _bucket_len(self, s: int) -> Optional[int]:
+        # Page-multiple buckets instead of powers of two: prefill
+        # compiles once per page count and admission maps exactly
+        # ceil(prompt / page_size) pages — power-of-two padding would
+        # map (and waste) pages for pad K/V.
+        return -(-max(s, 1) // self.page_size) * self.page_size
+
+    # -- page accounting ------------------------------------------------
+    def _pages_for(self, req: Request) -> int:
+        """Worst-case pages for ``req``: padded prompt plus its full
+        decode budget, clamped to the engine's ``max_seq`` stop rule."""
+        s = len(req.prompt)
+        blen = self._bucket_len(s)
+        budget = max(1, req.max_new_tokens - 1)
+        last = min(max(blen - 1, s + budget - 1), self.max_seq - 1)
+        return last // self.page_size + 1
+
+    def _admit_cap(self) -> Optional[int]:
+        """Page-budget constraint for the ladder sweep: live rows plus
+        the prefix of waiting requests (backfilled first — admission
+        order) whose worst-case reservations still fit the pool."""
+        cap = self._n_active()
+        remaining = self.cache.num_pages - self.cache.reserved_total
+        waiting = [r for r, _, _ in self._backfilled] + list(self.queue)
+        for req in waiting:
+            if cap >= self.max_batch:
+                break
+            need = self._pages_for(req)
+            if need > remaining:
+                break
+            cap += 1
+            remaining -= need
+        return cap
+
+    def _can_admit(self, req: Request) -> bool:
+        return self.cache.can_reserve(self._pages_for(req))
+
+    def _store_cache(self, req: Request, cache, slot: int) -> None:
+        mapped = self.cache.admit(cache, slot, self._pages_for(req))
+        self.stats["page_admits"] += mapped
+        self._note_pages_peak()
+
+    def _note_pages_peak(self) -> None:
+        mapped = self.cache.num_pages - self.cache.n_free_pages
+        if mapped > self.stats["pages_mapped_peak"]:
+            self.stats["pages_mapped_peak"] = mapped
+
+    # -- window over the page pool ---------------------------------------
+    def _window_call(self, rung: int, toks, pos, budget):
+        # Map the pages this window can write (bounded by the per-slot
+        # budget and max_seq, within each admission's reservation by
+        # construction — the free list cannot underflow here).
+        for slot in range(rung):
+            if self._req[slot] is None:
+                continue
+            b = int(self._budget[slot])
+            if b <= 0:
+                continue
+            last = min(int(self._pos[slot]) + min(self.window, b) - 1,
+                       self.max_seq - 1)
+            self.stats["page_grows"] += self.cache.ensure_capacity(slot,
+                                                                   last)
+        self._note_pages_peak()
+        self.cache.pools, toks, pos, budget, out = self._window_fn(
+            self.params, self.cache.pools, self.cache.table, toks, pos,
+            budget, rung=rung)
+        return toks, pos, budget, out
+
+    def _build_window_fn(self):
+        decode_fn = self.decode_fn
+        vocab = self.cfg.vocab_size
+        max_seq = self.max_seq
+        T = self.window
+
+        def decode_window(params, pools, table, toks, pos, budget, *, rung):
+            """T greedy tokens at batch shape ``rung``; one host sync.
+
+            Same carry discipline as the dense window, but the cache
+            operand is the shared page pool (donated, full-size — pages
+            are row-owned, so no rung slicing) plus the fixed-shape
+            page table sliced to the rung's rows.  Frozen rows write
+            their own (or, once released, the sink) page — never a page
+            another row owns.
+            """
+            # Trace-time compile counter (see the dense window fn).
+            self._window_traces += 1
+            tbl = jax.lax.slice_in_dim(table, 0, rung, axis=0)
+
+            def body(carry, _):
+                c, tk, ps, bd = carry
+                logits, c = decode_fn(params, c, tbl, tk[:, None], ps)
+                nxt = jnp.argmax(logits[:, -1, :vocab],
+                                 axis=-1).astype(jnp.int32)
+                live = bd > 0
+                emit = jnp.where(live, nxt, -1)
+                tk = jnp.where(live, nxt, tk)
+                ps = jnp.where(live, ps + 1, ps)
+                bd = jnp.where(live, bd - 1, bd)
+                bd = jnp.where(ps >= max_seq - 1, 0, bd)
+                return (c, tk, ps, bd), emit
+
+            (pools, toks, pos, budget), out = jax.lax.scan(
+                body, (pools, toks, pos, budget), None, length=T)
+            return pools, toks, pos, budget, out
+
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        return jax.jit(decode_window, static_argnames=("rung",),
+                       donate_argnums=donate)

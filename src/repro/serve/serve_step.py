@@ -70,6 +70,31 @@ def make_decode_step(cfg: ModelConfig, mesh=None):
     return decode_step
 
 
+def make_paged_decode_step(cfg: ModelConfig, mesh=None):
+    """Decode step over block-granular paged KV storage.
+
+    The returned step takes ``(params, pools, page_table, tokens, pos)``
+    where ``pools`` mirrors a dense cache pytree but every attention
+    leaf is a page pool ``{"pk": (L, n_pages, page_size, Hkv, hd),
+    "pv": ...}`` shared by all requests, ``page_table`` is the per-slot
+    ``(max_batch, max_pages_per_slot) int32`` indirection, and ``pos``
+    is per-row ``(B,)``.  Used by
+    :class:`repro.serve.paged_engine.PagedServeEngine`; the table is a
+    fixed-shape operand, so page-table *growth* (writing more entries)
+    never changes any argument shape and never triggers a recompile.
+    """
+    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
+    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+
+    def decode_step(params, pools, page_table: jax.Array,
+                    tokens: jax.Array, pos: jax.Array):
+        return forward_decode(params, cfg, tokens, pools, pos,
+                              sharder=sharder, mesh=mesh,
+                              batch_axes=batch_axes, page_table=page_table)
+
+    return decode_step
+
+
 def cache_specs(cache_shapes: PyTree, cfg: ModelConfig, mesh) -> PyTree:
     """PartitionSpecs for a cache pytree (stacked leading layer dim).
 

@@ -3,8 +3,10 @@
 CI installs the real hypothesis (declared in ``pyproject.toml``); hermetic
 environments without network access fall back to this shim so the tier-1
 suite still collects and runs.  It implements just the surface this repo
-uses — ``given``, ``settings``, ``strategies.integers`` /
-``sampled_from`` / ``lists`` / ``booleans`` / ``just`` / ``tuples`` —
+uses — ``given``, ``settings`` (including ``register_profile`` /
+``load_profile`` so ``HYPOTHESIS_PROFILE=ci`` works without the real
+package), ``strategies.integers`` / ``sampled_from`` / ``lists`` /
+``booleans`` / ``just`` / ``tuples`` —
 with deterministic pseudo-random example generation (fixed seed per
 test, so runs are reproducible) and no shrinking: a failing example is
 reported verbatim in the assertion chain.
@@ -75,13 +77,42 @@ def tuples(*strategies: Strategy) -> Strategy:
     return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
 
 
-def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
-             **_ignored):
+# Profile support (mirrors hypothesis.settings.register_profile /
+# load_profile): profiles carry a default ``max_examples`` that applies
+# to properties which do not set one explicitly — ``make ci`` loads the
+# bounded deterministic ``ci`` profile via HYPOTHESIS_PROFILE.
+_PROFILES = {"default": {"max_examples": _DEFAULT_MAX_EXAMPLES}}
+_ACTIVE_PROFILE = "default"
+
+
+def _profile_max_examples() -> int:
+    return _PROFILES[_ACTIVE_PROFILE].get("max_examples",
+                                          _DEFAULT_MAX_EXAMPLES)
+
+
+def register_profile(name: str, parent=None, **kwargs) -> None:
+    del parent
+    _PROFILES[name] = kwargs
+
+
+def load_profile(name: str) -> None:
+    global _ACTIVE_PROFILE
+    if name not in _PROFILES:
+        raise KeyError(f"unregistered hypothesis profile {name!r}")
+    _ACTIVE_PROFILE = name
+
+
+def settings(max_examples: int = None, deadline=None, **_ignored):
     def decorate(fn):
-        fn._fallback_max_examples = max_examples
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
         return fn
 
     return decorate
+
+
+settings.register_profile = register_profile
+settings.load_profile = load_profile
 
 
 def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
@@ -94,7 +125,8 @@ def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
         def wrapper(*args, **kwargs):
             max_examples = getattr(
                 wrapper, "_fallback_max_examples",
-                getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES))
+                getattr(fn, "_fallback_max_examples",
+                        _profile_max_examples()))
             seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
             rng = random.Random(seed)
             for i in range(max_examples):
@@ -105,11 +137,15 @@ def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
                     raise AssertionError(
                         f"falsifying example (#{i}): {drawn!r}") from exc
 
-        # pytest must not mistake the property's parameters for fixtures:
-        # hide the wrapped function's signature.
+        # pytest must not mistake the property's drawn parameters for
+        # fixtures, but parameters *not* filled by a strategy (self,
+        # real fixtures) must stay visible — the real hypothesis
+        # exposes exactly the residual signature the same way.
         if hasattr(wrapper, "__wrapped__"):
             del wrapper.__wrapped__
-        wrapper.__signature__ = inspect.Signature()
+        wrapper.__signature__ = inspect.Signature(
+            [p for name, p in inspect.signature(fn).parameters.items()
+             if name not in pos_kw])
         wrapper.hypothesis_fallback = True
         return wrapper
 
@@ -130,6 +166,10 @@ def install() -> None:
     mod.given = given
     mod.settings = settings
     mod.assume = assume
+    mod.seed = lambda *_a, **_k: (lambda fn: fn)   # already deterministic
+    mod.Phase = types.SimpleNamespace(explicit=None, reuse=None,
+                                      generate=None, target=None,
+                                      shrink=None, explain=None)
     mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "sampled_from", "booleans", "just", "lists",

@@ -1,0 +1,192 @@
+"""Cross-engine differential fuzzing: the three serving engines must
+agree token-for-token on randomized workloads.
+
+Three engines now implement the same serving contract —
+``ServeEngine`` (sequential baseline), ``SlotServeEngine`` (dense slot
+cache), ``PagedServeEngine`` (block-granular paged storage) — and every
+storage/scheduling optimization is only admissible if it is invisible
+in the token streams.  This harness generates random workloads
+(submission order = arrival order, prompt lengths biased to page
+boundaries ±1, heterogeneous budgets, optional page-pool pressure) and
+asserts:
+
+* slot and paged engines are token-identical on *every* workload (rows
+  are independent in both, so batch composition — even when the page
+  pool defers admissions — must not matter);
+* all three engines agree on uniform-length workloads (the sequential
+  engine's shared ``pos = max(positions)`` makes mixed-length
+  comparisons ill-defined by design — see ``repro.serve.slot_engine``);
+* ``coexec_backend`` changes scheduling stats only, never tokens;
+* stats stay consistent (admits == releases, page pool drains back to
+  full, token counts conserved).
+
+Engines are long-lived and ``reset()`` between examples so jit caches
+amortize across the fuzz run.  The ``ci`` profile (loaded by default
+and by ``make ci`` via ``HYPOTHESIS_PROFILE=ci``) runs a small
+deterministic example budget in tier-1; the ``wide`` profile backs the
+``slow``-marked sweep in the nightly workflow.  Under the real
+hypothesis package, falsifying examples land in ``.hypothesis/`` which
+ci.yml uploads as an artifact on failure.
+"""
+from hypothesis import given, settings, strategies as st
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import (PagedServeEngine, Request, ServeEngine,
+                         SlotServeEngine)
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+MAX_BATCH = 4
+MAX_SEQ = 64
+WINDOW = 4
+PSZ = 8          # paged engine page size
+SMALL_POOL = 12  # < 2 full-length requests; dense equivalent is 32
+
+# Prompt lengths biased to the page boundaries +-1 (PSZ=8 -> 7/8/9,
+# 15/16/17) where off-by-one indexing bugs in the table live.
+LENS = st.sampled_from([1, 2, 3, 5, 6, 7, 8, 9, 10, 12, 14, 15, 16, 17,
+                        20, 23])
+WORKLOADS = st.lists(st.tuples(LENS, st.integers(1, 7)),
+                     min_size=1, max_size=6)
+SEEDS = st.integers(0, 2 ** 16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engines(setup):
+    """One long-lived engine per (kind, coexec) point; reset per example."""
+    cfg, params = setup
+    legacy_prefill = jax.jit(make_prefill_step(cfg, cache_len=MAX_SEQ))
+    legacy_decode = jax.jit(make_decode_step(cfg))
+
+    def legacy(coexec=None):
+        return ServeEngine(cfg, params, prefill_fn=legacy_prefill,
+                           decode_fn=legacy_decode, cache_init_fn=None,
+                           max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                           coexec_backend=coexec)
+
+    def slot(coexec=None):
+        return SlotServeEngine(cfg, params, max_batch=MAX_BATCH,
+                               max_seq=MAX_SEQ, window=WINDOW,
+                               coexec_backend=coexec)
+
+    def paged(coexec=None, num_pages=None):
+        return PagedServeEngine(cfg, params, max_batch=MAX_BATCH,
+                                max_seq=MAX_SEQ, window=WINDOW,
+                                page_size=PSZ, num_pages=num_pages,
+                                coexec_backend=coexec)
+
+    return {"legacy": legacy(), "legacy_co": legacy("xla"),
+            "slot": slot(), "slot_co": slot("xla"),
+            "paged": paged(), "paged_co": paged("xla"),
+            "paged_small": paged(num_pages=SMALL_POOL)}
+
+
+def _prompts(workload, seed, vocab):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=s).astype(np.int32)
+            for s, _ in workload]
+
+
+def _serve(eng, workload, prompts):
+    eng.reset()
+    for rid, ((_, budget), prompt) in enumerate(zip(workload, prompts)):
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=budget))
+    done = eng.run(max_steps=4096)
+    return {r.rid: tuple(r.generated) for r in done}
+
+
+def _check_serve_stats(eng, tokens, workload):
+    assert len(tokens) == len(workload)
+    if isinstance(eng, SlotServeEngine):   # includes PagedServeEngine
+        assert eng.stats["slot_admits"] == len(workload)
+        assert eng.stats["slot_releases"] == len(workload)
+        assert eng.cache.n_free == eng.max_batch
+    if isinstance(eng, PagedServeEngine):
+        # The pool drains back to empty: no leaked pages/reservations.
+        assert eng.cache.n_free_pages == eng.cache.num_pages
+        assert eng.cache.reserved_total == 0
+        assert eng.stats["pages_mapped_peak"] <= eng.cache.num_pages
+        assert eng.stats["page_admits"] >= len(workload)
+
+
+class TestSlotVsPaged:
+    @given(workload=WORKLOADS, seed=SEEDS)
+    def test_token_identical_on_mixed_workloads(self, engines, setup,
+                                                workload, seed):
+        """Dense-slot and paged storage must agree on every workload —
+        including when the small pool defers admissions, changing batch
+        composition but (rows being independent) never tokens."""
+        cfg, _ = setup
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _serve(engines["slot"], workload, prompts)
+        for name in ("paged", "paged_small"):
+            got = _serve(engines[name], workload, prompts)
+            assert got == want, name
+            _check_serve_stats(engines[name], got, workload)
+        _check_serve_stats(engines["slot"], want, workload)
+
+
+class TestAllThreeEngines:
+    @given(n=st.integers(1, 6), length=LENS,
+           budgets=st.lists(st.integers(1, 7), min_size=6, max_size=6),
+           seed=SEEDS)
+    def test_token_identical_on_uniform_lengths(self, engines, setup, n,
+                                                length, budgets, seed):
+        """Uniform prompt lengths: the sequential baseline computes the
+        same thing as the slot engines, so all three must emit
+        identical streams (the ur-contract every PR preserves)."""
+        cfg, _ = setup
+        workload = [(length, budgets[i]) for i in range(n)]
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _serve(engines["legacy"], workload, prompts)
+        for name in ("slot", "paged", "paged_small"):
+            got = _serve(engines[name], workload, prompts)
+            assert got == want, name
+        # Budget-determined token counts (workloads stay clear of the
+        # max_seq truncation edge): prefill token + >=1 decode step.
+        assert sum(len(t) for t in want.values()) == sum(
+            max(b, 2) for _, b in workload)
+
+
+class TestCoexecInvariance:
+    @given(workload=WORKLOADS, seed=SEEDS)
+    def test_coexec_backend_never_changes_tokens(self, engines, setup,
+                                                 workload, seed):
+        """Executing the packed placement (backfill prefills inside the
+        decode window) reorders work, not results — for both storage
+        engines."""
+        cfg, _ = setup
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _serve(engines["slot"], workload, prompts)
+        for name in ("slot_co", "paged_co"):
+            got = _serve(engines[name], workload, prompts)
+            assert got == want, name
+            _check_serve_stats(engines[name], got, workload)
+
+
+@pytest.mark.slow
+class TestWideSweep:
+    @settings(max_examples=40, deadline=None)
+    @given(workload=st.lists(
+        st.tuples(st.integers(1, 40), st.integers(1, 10)),
+        min_size=1, max_size=10), seed=SEEDS)
+    def test_wide_mixed_workloads(self, engines, setup, workload, seed):
+        """Nightly: wider length/budget/queue-depth ranges, same
+        contract (run with HYPOTHESIS_PROFILE=wide for fresh seeds)."""
+        cfg, _ = setup
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _serve(engines["slot"], workload, prompts)
+        for name in ("paged", "paged_small", "slot_co", "paged_co"):
+            got = _serve(engines[name], workload, prompts)
+            assert got == want, name
+            _check_serve_stats(engines[name], got, workload)
