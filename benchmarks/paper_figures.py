@@ -9,7 +9,7 @@ from __future__ import annotations
 import time
 from typing import List
 
-from benchmarks.common import Row, write_csv
+from benchmarks.common import Row, timeit, write_csv
 from repro.core import (area_overhead_vs_tpu, area_report, MONOLITHIC_128,
                         simulate_gemm, simulate_workload, SISA_128, TABLE2)
 from repro.core.redas import simulate_workload_redas
@@ -134,21 +134,26 @@ def bench_fig7_casestudy() -> List[Row]:
 
 def bench_table2_shapes() -> List[Row]:
     """Table 2: the unique GEMM triples per model."""
-    t0 = time.perf_counter()
-    rows = []
-    for name, w in TABLE2.items():
-        for layer in w.layers:
-            rows.append((name, layer.layer_id, layer.name,
-                         f"(m,{layer.n},{layer.k})", layer.occurrence))
+    def enumerate_rows():
+        rows = []
+        for name, w in TABLE2.items():
+            for layer in w.layers:
+                rows.append((name, layer.layer_id, layer.name,
+                             f"(m,{layer.n},{layer.k})", layer.occurrence))
+        return rows
+    # Median-of-3 over the enumeration only: the CSV write below is
+    # disk-latency noise (a one-shot timing of it flaked up to 45x
+    # between runs), not part of the measured surface.
+    us = timeit(enumerate_rows)
+    rows = enumerate_rows()
     write_csv("table2_shapes", ["model", "id", "layer", "triple",
                                 "occurrence"], rows)
-    us = (time.perf_counter() - t0) * 1e6
     return [("table2_gemm_shapes", us, f"{len(rows)} unique GEMMs/4 models")]
 
 
 def bench_table3_area_energy() -> List[Row]:
     """Table 3 + §4.3 area comparison."""
-    t0 = time.perf_counter()
+    us = timeit(area_report)
     rep = area_report()
     rows = [(k, f"{v['area_mm2']:.2f}", f"{v['static_nj_per_cycle']:.2f}")
             for k, v in rep.rows.items()]
@@ -157,7 +162,6 @@ def bench_table3_area_energy() -> List[Row]:
     write_csv("table3_area_energy", ["component", "area_mm2",
                                      "static_nj_per_cycle"], rows)
     ov = area_overhead_vs_tpu()
-    us = (time.perf_counter() - t0) * 1e6
     return [("table3_total_area", us,
              f"{rep.total_mm2:.2f}mm2 (paper: 221.27mm2)"),
             ("table3_area_overhead", 0.0,

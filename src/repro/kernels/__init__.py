@@ -7,8 +7,12 @@
 * ``coexec`` — fused multi-tenant co-execution: one grid runs the tile
   tasks of many heterogeneous GEMMs, interleaved per the slab packer's
   placement (``repro.core.multi``).
+* ``paged_attn`` — fused paged-attention decode: scalar-prefetched page
+  table drives in-place K/V page reads from the serving pool (int8 or
+  float), online softmax + ring mask inside the kernel.
 * ``moe_gemm`` — grouped per-expert GEMM used by the MoE layers.
 * ``ops`` — padded/differentiable wrappers; ``ref`` — pure-jnp oracles.
+* ``runtime`` — process-wide switches (CI's force-interpret override).
 """
 from repro.kernels.coexec import (build_coexec_plan, coexec_matmul,
                                   CoexecPlan, CoexecTenant,
@@ -18,6 +22,10 @@ from repro.kernels.grouped_gemm import (flat_block_rows, flat_group_offsets,
                                         ragged_grouped_gemm,
                                         segment_grouped_gemm)
 from repro.kernels.ops import set_default_backend, sisa_einsum_2d, sisa_matmul
+from repro.kernels.paged_attn import (paged_attention, quantize_page_pool,
+                                      resolve_paged_attn_backend,
+                                      set_paged_attn_backend)
+from repro.kernels.runtime import resolve_interpret, set_force_interpret
 from repro.kernels.sisa_gemm import BlockConfig, choose_block_config, sisa_gemm
 
 __all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
@@ -26,4 +34,7 @@ __all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
            "flat_ragged_gemm", "segment_grouped_gemm",
            "flat_block_rows", "flat_group_offsets",
            "CoexecPlan", "CoexecTenant", "build_coexec_plan",
-           "coexec_matmul", "sequential_matmul"]
+           "coexec_matmul", "sequential_matmul",
+           "paged_attention", "quantize_page_pool",
+           "set_paged_attn_backend", "resolve_paged_attn_backend",
+           "set_force_interpret", "resolve_interpret"]

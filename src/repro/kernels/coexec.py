@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import CompilerParams
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.sisa_gemm import choose_block_config
 
 
@@ -260,7 +261,7 @@ def _coexec_call(plan: CoexecPlan, a_flat: jax.Array, b_stack: jax.Array,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name=f"coexec_t{len(plan.tenants)}_{bm}x{bn}x{bk}",
     )(jnp.asarray(plan.meta), a_flat, b_stack)
 

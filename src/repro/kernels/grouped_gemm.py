@@ -84,6 +84,7 @@ from jax.experimental.pallas import tpu as pltpu
 import jax.numpy as jnp
 
 from repro.compat import CompilerParams
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.sisa_gemm import choose_block_config
 
 
@@ -237,7 +238,7 @@ def _flat_forward(x, w, starts, sizes, gids, *, bm, m_hint, interpret):
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name=f"flat_grouped_gemm_g{g}_{bm}x{bf}x{bd}",
     )(meta, x, w)
     return out[:m, :f]
@@ -275,7 +276,7 @@ def _flat_dw(x, dy, starts, sizes, gids, n_groups, *, bm, m_hint, interpret):
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name=f"flat_grouped_dw_g{n_groups}_{bm}x{bf}x{bd}",
     )(meta, x, dy)[:, :d, :f]
     # Groups with no rows own no tiles: their blocks are never written.

@@ -15,6 +15,7 @@ from jax.experimental.pallas import tpu as pltpu
 import jax.numpy as jnp
 
 from repro.compat import CompilerParams
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.sisa_gemm import choose_block_config
 
 
@@ -66,7 +67,7 @@ def moe_grouped_gemm(x: jax.Array, w: jax.Array,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name=f"moe_gemm_e{e}_{bc}x{bf}x{bd}",
     )(x, w)
     return out[:, :c, :f]

@@ -1,0 +1,41 @@
+"""Process-wide kernel execution switches.
+
+One concern lives here: the **force-interpret** override behind CI's
+dedicated kernel leg (``REPRO_PALLAS_INTERPRET=1``, consumed by an
+autouse fixture in ``tests/conftest.py``).  Every ``pl.pallas_call``
+site in :mod:`repro.kernels` resolves its ``interpret`` argument through
+:func:`resolve_interpret`, so flipping the switch runs the *real kernel
+bodies* — index maps, scalar prefetch, scratch carries, masks — under
+the Pallas interpreter on CPU runners, instead of silently skipping the
+kernel path the way backend dispatch ("xla" on CPU) otherwise would.
+
+The flag is read at trace time.  Callers thread ``interpret`` through
+``jax.jit`` static arguments, so the override must be set *before* the
+first kernel call of the process (the conftest fixture is
+session-scoped for exactly this reason); flipping it later only affects
+shapes that have not been traced yet.
+"""
+from __future__ import annotations
+
+_FORCE_INTERPRET = {"on": False}
+
+
+def set_force_interpret(on: bool) -> None:
+    """Globally force ``interpret=True`` for all Pallas kernel calls.
+
+    Used by the CI kernel leg (via ``REPRO_PALLAS_INTERPRET=1``) so the
+    kernel suites exercise real kernel bodies on CPU runners.  Set it
+    before the first kernel call — the flag is baked into jit traces.
+    """
+    _FORCE_INTERPRET["on"] = bool(on)
+
+
+def force_interpret_enabled() -> bool:
+    """True when the process-wide interpret override is active."""
+    return _FORCE_INTERPRET["on"]
+
+
+def resolve_interpret(interpret: bool) -> bool:
+    """The effective ``interpret`` flag for a Pallas call site: the
+    caller's request OR'd with the process-wide override."""
+    return bool(interpret) or _FORCE_INTERPRET["on"]

@@ -30,6 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 import jax.numpy as jnp
 
 from repro.compat import CompilerParams
+from repro.kernels.runtime import resolve_interpret
 
 LANE = 128
 
@@ -141,7 +142,7 @@ def sisa_gemm_splitk(a: jax.Array, b: jax.Array, cfg: BlockConfig,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name=f"sisa_gemm_splitk_{cfg.bm}x{cfg.bn}x{cfg.bk}",
     )(a, b)
     return jnp.sum(partial, axis=0).astype(a.dtype)
@@ -175,6 +176,6 @@ def sisa_gemm(a: jax.Array, b: jax.Array, cfg: BlockConfig,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name=f"sisa_gemm_{cfg.bm}x{cfg.bn}x{cfg.bk}",
     )(a, b)

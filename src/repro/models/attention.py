@@ -365,7 +365,9 @@ def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
     ``cache`` holds this layer's slice of the shared page pool:
     ``{"pk": (n_pages, page_size, Hkv, hd), "pv": ...}`` — a flat pool of
     fixed-size sequence blocks with no per-request ``max_seq``
-    reservation.  ``page_table`` is the per-row indirection
+    reservation — plus, for int8 pools, per-page scale planes
+    ``{"pk_s": (n_pages, page_size, Hkv, 1) bf16, "pv_s": ...}``.
+    ``page_table`` is the per-row indirection
     ``(B, max_pages_per_slot) int32``: logical page ``j`` of row ``i``
     lives at physical page ``page_table[i, j]``.  ``pos`` is the per-row
     ``(B,)`` write position (the paged engine always decodes with
@@ -373,17 +375,25 @@ def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
 
     The new token's K/V is scattered through the table (row ``i`` writes
     physical cell ``(table[i, pos_i // P], pos_i % P)`` — one O(B) store,
-    page ownership is exclusive so rows never collide), then K/V is
-    gathered back through the table into ``(B, max_pages * P, ...)``
-    logical order.  The per-row ring mask validates logical positions
-    ``<= pos_i`` only, so unmapped table entries (released rows point at
-    the pool's sink page, live rows' tail entries are beyond their
-    mapped span) are gathered but never attended — exactly the slot
-    engine's stale-K/V invariant, page-granular.
+    page ownership is exclusive so rows never collide; quantized pools
+    scatter the int8 values and their scales).  Attention then reads the
+    pool through the backend chosen by
+    :func:`repro.kernels.paged_attention` — the fused Pallas kernel
+    (TPU / interpret CI leg) or its page-blocked XLA twin keep the pool
+    *stationary* and apply the per-row ring mask ``j <= pos_i`` inside
+    the kernel; the ``"gather"`` reference materializes the PR-5 dense
+    ``(B, max_pages * P, ...)`` view and masks in SDPA.  Either way,
+    unmapped table entries (released rows point at the pool's sink page,
+    live rows' tail entries are beyond their mapped span) are read but
+    never attended — the slot engine's stale-K/V invariant,
+    page-granular.
     """
+    from repro.kernels.paged_attn import (paged_attention,
+                                          resolve_paged_attn_backend)
     if CACHE_QUANT["enabled"]:
         raise NotImplementedError(
-            "paged decode does not support the quantized KV cache yet")
+            "paged storage quantizes at the pool boundary (see "
+            "PagedServeEngine(kv_quant=...)), not via CACHE_QUANT")
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     psz = cache["pk"].shape[1]
@@ -398,21 +408,44 @@ def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
     rows = jnp.arange(b)
     phys = page_table[rows, pos // psz]              # (B,) physical pages
     off = pos % psz
-    pk = cache["pk"].at[phys, off].set(k[:, 0])
-    pv = cache["pv"].at[phys, off].set(v[:, 0])
+    quant = "pk_s" in cache
+    if quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        pk = cache["pk"].at[phys, off].set(kq[:, 0])
+        pv = cache["pv"].at[phys, off].set(vq[:, 0])
+        pk_s = cache["pk_s"].at[phys, off].set(ks[:, 0])
+        pv_s = cache["pv_s"].at[phys, off].set(vs[:, 0])
+    else:
+        pk = cache["pk"].at[phys, off].set(k[:, 0])
+        pv = cache["pv"].at[phys, off].set(v[:, 0])
+        pk_s = pv_s = None
     pk = sharder.constrain(pk, "kv_cache")
     pv = sharder.constrain(pv, "kv_cache")
     new_cache = {"pk": pk, "pv": pv}
-    # Gather each row's pages back into logical sequence order.  The
-    # transient (B, max_pages, P, ...) view is attention's working set —
-    # the *persistent* pool stays flat and shared.
-    kd = pk[page_table].reshape(b, -1, cfg.n_kv_heads, hd)
-    vd = pv[page_table].reshape(b, -1, cfg.n_kv_heads, hd)
-    j = jnp.arange(kd.shape[1])
-    mask = (j[None, :] <= pos[:, None])[:, None, None, :]   # (B,1,1,Skv)
-    kk = _repeat_kv(kd, cfg.n_heads // cfg.n_kv_heads)
-    vv = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
-    out = _sdpa(q, kk, vv, mask, sharder)
+    if quant:
+        new_cache.update({"pk_s": pk_s, "pv_s": pv_s})
+    impl = resolve_paged_attn_backend()
+    if impl == "gather":
+        # PR-5 reference: gather each row's pages back into logical
+        # sequence order (the transient dense view the fused kernel
+        # avoids) and mask in SDPA.
+        if quant:
+            kd = _dequant_kv(pk[page_table], pk_s[page_table], x.dtype)
+            vd = _dequant_kv(pv[page_table], pv_s[page_table], x.dtype)
+        else:
+            kd, vd = pk[page_table], pv[page_table]
+        kd = kd.reshape(b, -1, cfg.n_kv_heads, hd)
+        vd = vd.reshape(b, -1, cfg.n_kv_heads, hd)
+        j = jnp.arange(kd.shape[1])
+        mask = (j[None, :] <= pos[:, None])[:, None, None, :]  # (B,1,1,Skv)
+        kk = _repeat_kv(kd, cfg.n_heads // cfg.n_kv_heads)
+        vv = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
+        out = _sdpa(q, kk, vv, mask, sharder)
+    else:
+        out = paged_attention(q[:, 0], pk, pv, page_table, pos,
+                              pk_scale=pk_s, pv_scale=pv_s,
+                              impl=impl)[:, None]     # (B, 1, H, hd)
     out = out.reshape(b, 1, cfg.n_heads * hd)
     return linear_apply(p["o"], out), new_cache
 

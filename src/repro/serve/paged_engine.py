@@ -12,7 +12,11 @@ This module applies the SISA idea to serving memory:
   requests, plus one reserved *sink* page (index ``num_pages``) that
   absorbs the masked writes of released rows.  A request holds exactly
   the pages its sequence occupies, so a 4k-token tenant and a 30-token
-  tenant stop paying the same rent.
+  tenant stop paying the same rent.  With ``quant="int8"`` the pool
+  stores symmetric int8 K/V plus bf16 per-page scale planes
+  (``pk_s``/``pv_s``), quantized once at the admission scatter and per
+  token at the decode scatter — ~0.31x the f32 pool bytes — and
+  dequantized inside the fused attention kernel.
 
 * **Per-slot page table**: a fixed-shape
   ``(max_slots, max_pages_per_slot) int32`` indirection from logical
@@ -23,43 +27,67 @@ This module applies the SISA idea to serving memory:
   shapes never change, so growth never recompiles anything); release
   returns the pages to the free list and points the row at the sink.
 
+* **Refcounted prefix sharing (copy-on-write)**: physical pages carry a
+  refcount, so two requests whose token prefixes agree through a page
+  boundary map the *same* physical page (admission passes
+  ``shared_pages``; causal attention guarantees identical token
+  prefixes produce identical K/V for those positions, independent of
+  bucket padding or continuations).  Shared pages are only freed when
+  the last holder releases; a holder that must write a shared page
+  first gets a private copy (:meth:`PagedKVCache.make_writable` — the
+  serve flow never needs it, because writes start at the prompt length
+  and shared pages only ever cover *full prompt* pages, but the
+  allocator supports divergent append generally).  The engine keys
+  sharing on a host-side prefix registry
+  (page-aligned token prefix -> physical page), purged as pages drain.
+
 * **Reservation-based admission**: at admit time a request *reserves*
   its worst case ``ceil(min(max(padded_prompt, prompt + budget),
-  max_seq) / page_size)`` pages (usually far below the dense engine's
-  ``max_seq`` — budgets are small) without mapping them.  Lazy boundary
-  mapping then can never find the free list empty, decode never stalls
-  or deadlocks, and :func:`repro.serve.engine.choose_decode_batch`'s
+  max_seq) / page_size)`` pages **minus the pages it maps by
+  reference** (shared pages are never re-written, so they can never
+  need a fresh allocation) without mapping them.  Pages whose original
+  owner released while sharers still hold them are tracked as
+  *orphaned* and charged against the free budget, so lazy boundary
+  mapping can never find the free list empty, decode never stalls or
+  deadlocks, and :func:`repro.serve.engine.choose_decode_batch`'s
   ``admit_cap`` keeps the ladder sweep from targeting a rung the pool
   cannot back.
 
 The serve loop, ladder quantization, multi-token window, bucketed
 prefill, and coexec backfill are inherited from ``SlotServeEngine``
 unchanged; only storage and the decode step differ
-(:func:`repro.models.attention.paged_attn_decode_step` gathers K/V
-through the table with a per-row ring mask).  Rows stay independent, so
-the paged engine is token-identical to the slot engine on every
-workload — fuzzed across random workloads in
-``tests/test_serve_differential.py``.
+(:func:`repro.models.attention.paged_attn_decode_step` dispatches to
+the fused paged-attention kernel of :mod:`repro.kernels.paged_attn`,
+which reads K/V pages in place from the pool with the per-row ring
+mask applied in-kernel).  Rows stay independent, so the paged engine is
+token-identical to the slot engine on every workload — fuzzed across
+random workloads in ``tests/test_serve_differential.py``.
 
 Scope: pure global-attention stacks (every layer ``attn``, no MoE /
-enc-dec / frontend, unquantized cache).  Sliding-window rings are
-already bounded by their window and recurrent states have no sequence
-axis — paging them is the ROADMAP follow-up, not a prerequisite.
+enc-dec / frontend).  Sliding-window rings are already bounded by their
+window and recurrent states have no sequence axis — paging them is the
+ROADMAP follow-up, not a prerequisite.  KV quantization here is the
+pool-boundary ``kv_quant="int8"`` path, not the dense engines'
+``CACHE_QUANT`` flag.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
+from repro.kernels.paged_attn import quantize_page_pool
 from repro.models.attention import CACHE_QUANT
 from repro.serve.engine import Request
 from repro.serve.serve_step import make_paged_decode_step
 from repro.serve.slot_engine import SlotServeEngine
 
 PyTree = Any
+
+POOL_QUANTS = (None, "int8")
 
 
 def _rename_kv(tree):
@@ -78,30 +106,58 @@ def _rename_kv(tree):
     return tree
 
 
+def _quantize_pool_tree(tree):
+    """Renamed f32 chunks -> int8 pool leaves with bf16 scale planes
+    (``{"pk","pv"} -> {"pk","pk_s","pv","pv_s"}``), per-position
+    symmetric over the head dim — the same numerics the decode scatter
+    applies to new tokens, so admitted and decoded cells dequantize
+    identically."""
+    if isinstance(tree, dict):
+        if "pk" in tree:
+            kq, ks = quantize_page_pool(tree["pk"])
+            vq, vs = quantize_page_pool(tree["pv"])
+            return {"pk": kq, "pk_s": ks, "pv": vq, "pv_s": vs}
+        return {k: _quantize_pool_tree(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_quantize_pool_tree(t) for t in tree]
+    return tree
+
+
 class PagedKVCache:
-    """Flat page pool + per-slot page table + free-list allocator.
+    """Flat page pool + per-slot page table + refcounting allocator.
 
     Physical storage is ``(L, num_pages + 1, page_size, ...)`` per cache
     leaf (the ``+1`` is the sink page) with one shared logical->physical
-    table ``(max_slots, max_pages_per_slot) int32`` across layers.
-    The allocator is reservation-based: ``admit`` maps the prompt's
-    pages and reserves the request's worst case; ``ensure_capacity``
-    lazily maps pages up to a position (never beyond the reservation,
-    so the free list cannot underflow); ``release`` frees the slot's
-    pages and points its table row at the sink so the masked writes of
-    a released row can never corrupt a page that was reused.
+    table ``(max_slots, max_pages_per_slot) int32`` across layers; with
+    ``quant="int8"`` each K/V leaf is int8 plus a bf16 scale-plane leaf.
+
+    The allocator is reservation-based and refcounted: ``admit`` maps
+    the prompt's fresh pages (and bumps the refcount of ``shared_pages``
+    mapped by reference), reserving the request's worst-case *exclusive*
+    page count; ``ensure_capacity`` lazily maps pages up to a position
+    (never beyond reservation + shared, so the free list cannot
+    underflow); ``make_writable`` gives a slot a private copy of a
+    shared page (copy-on-write); ``release`` decrements refcounts,
+    frees pages only when they drain to zero, and points the slot's
+    table row at the sink so the masked writes of a released row can
+    never corrupt a page that was reused.  A page that outlives its
+    reserving owner (refcount held by sharers) is *orphaned* and
+    charged against ``can_reserve`` until it drains.
     """
 
     def __init__(self, max_slots: int, num_pages: int, page_size: int,
-                 max_pages_per_slot: int):
+                 max_pages_per_slot: int, quant: Optional[str] = None):
         if num_pages < max_pages_per_slot:
             raise ValueError(
                 f"pool of {num_pages} pages cannot hold one full-length "
                 f"request ({max_pages_per_slot} pages)")
+        if quant not in POOL_QUANTS:
+            raise ValueError(f"quant={quant!r} not in {POOL_QUANTS}")
         self.max_slots = max_slots
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
+        self.quant = quant
         self.sink = num_pages                      # physical sink page id
         self.pools: Optional[PyTree] = None        # built at first admit
         self.table = jnp.full((max_slots, max_pages_per_slot), self.sink,
@@ -110,20 +166,30 @@ class PagedKVCache:
         self._free_pages = list(range(num_pages - 1, -1, -1))  # pop->lowest
         self._mapped: List[List[int]] = [[] for _ in range(max_slots)]
         self._reserved = [0] * max_slots
+        self._shared = [0] * max_slots             # pages mapped by ref
+        self._refcount = [0] * num_pages
+        self._owner: List[Optional[int]] = [None] * num_pages
+        self._orphaned = 0                         # refcount>0, no owner
         self.reserved_total = 0
 
         donate = () if jax.default_backend() == "cpu" else (0, 1)
         psz = page_size
 
-        def admit_op(pools, table, chunks, pages, slot):
-            pools = jax.tree.map(
-                lambda b, c: b.at[:, pages].set(
-                    c.reshape((c.shape[0], -1, psz) + c.shape[3:])),
-                pools, chunks)
+        def admit_op(pools, table, chunks, fresh, pages, slot, *,
+                     n_shared: int):
+            if quant is not None:
+                chunks = _quantize_pool_tree(chunks)
+
+            def scatter(b, c):
+                c = c.reshape((c.shape[0], -1, psz) + c.shape[3:])
+                return b.at[:, fresh].set(c[:, n_shared:])
+
+            pools = jax.tree.map(scatter, pools, chunks)
             return pools, jax.lax.dynamic_update_slice(
                 table, pages[None], (slot, jnp.int32(0)))
 
-        self._admit_op = jax.jit(admit_op, donate_argnums=donate)
+        self._admit_op = jax.jit(admit_op, static_argnames=("n_shared",),
+                                 donate_argnums=donate)
         self._grow_op = jax.jit(
             lambda table, pages, slot, start: jax.lax.dynamic_update_slice(
                 table, pages[None], (slot, start)),
@@ -134,6 +200,14 @@ class PagedKVCache:
                                 jnp.int32), (slot, jnp.int32(0))),
             donate_argnums=() if jax.default_backend() == "cpu" else (0,))
 
+        def cow_op(pools, table, src, dst, slot, idx):
+            pools = jax.tree.map(lambda b: b.at[:, dst].set(b[:, src]),
+                                 pools)
+            return pools, jax.lax.dynamic_update_slice(
+                table, dst[None, None], (slot, idx))
+
+        self._cow_op = jax.jit(cow_op, donate_argnums=donate)
+
     # -- slot free list (same discipline as SlotKVCache) ---------------
     @property
     def n_free(self) -> int:
@@ -143,33 +217,56 @@ class PagedKVCache:
     def n_free_pages(self) -> int:
         return len(self._free_pages)
 
+    @property
+    def orphaned_pages(self) -> int:
+        """Occupied pages charged to no live reservation (their owner
+        released while sharers still hold them)."""
+        return self._orphaned
+
     def acquire(self) -> int:
         """Claim the lowest free slot (keeps the ladder rung minimal)."""
         return self._free_slots.pop()
 
     def can_reserve(self, n_pages: int) -> bool:
         """True iff the pool can still back ``n_pages`` worst-case
-        pages on top of every live request's reservation."""
-        return self.num_pages - self.reserved_total >= n_pages
+        exclusive pages on top of every live reservation and every
+        orphaned (shared, owner-released) page."""
+        return (self.num_pages - self.reserved_total - self._orphaned
+                >= n_pages)
 
     def mapped_pages(self, slot: int) -> List[int]:
         """Physical pages currently mapped by ``slot`` (logical order)."""
         return list(self._mapped[slot])
 
     def reserved_pages(self, slot: int) -> int:
-        """Worst-case page reservation held by ``slot``."""
+        """Worst-case exclusive page reservation held by ``slot``."""
         return self._reserved[slot]
 
+    def shared_pages_of(self, slot: int) -> int:
+        """Pages ``slot`` maps by reference (admitted shared, not yet
+        copied-on-write)."""
+        return self._shared[slot]
+
+    def page_refcount(self, page: int) -> int:
+        """Number of slots currently mapping physical ``page``."""
+        return self._refcount[page]
+
     # -- page lifecycle -------------------------------------------------
-    def admit(self, prefill_cache: PyTree, slot: int,
-              reserve_pages: int) -> int:
+    def admit(self, prefill_cache: PyTree, slot: int, reserve_pages: int,
+              shared_pages: Sequence[int] = ()) -> int:
         """Map a prefilled cache into ``slot`` and reserve its worst case.
 
         The cache's sequence capacity must be page-aligned (the paged
-        engine buckets prompts to page multiples); its
-        ``ceil(prompt_pages)`` chunks are scattered into freshly mapped
-        physical pages with one donated jitted update that also writes
-        the slot's table row.  Returns the number of pages mapped.
+        engine buckets prompts to page multiples).  The first
+        ``len(shared_pages)`` logical pages are mapped *by reference*
+        (refcount bump — the caller asserts their content equals the
+        prefill's leading chunks, which the engine's prefix registry
+        guarantees); the remaining chunks are scattered into freshly
+        mapped physical pages with one donated jitted update that also
+        writes the slot's table row.  ``reserve_pages`` is the
+        *exclusive* worst case (shared pages excluded — they are never
+        rewritten without :meth:`make_writable`).  Returns the number of
+        fresh pages mapped.
         """
         leaves = jax.tree.leaves(prefill_cache)
         cap = leaves[0].shape[2]
@@ -180,62 +277,160 @@ class PagedKVCache:
         if n > self.max_pages_per_slot:
             raise ValueError(f"prompt needs {n} pages > max_pages_per_slot "
                              f"{self.max_pages_per_slot}")
-        if reserve_pages < n or not self.can_reserve(reserve_pages):
+        shared = list(shared_pages)
+        n_fresh = n - len(shared)
+        if n_fresh < 0:
+            raise ValueError(f"{len(shared)} shared pages exceed the "
+                             f"prompt's {n} pages")
+        for pg in shared:
+            if self._refcount[pg] < 1:
+                raise ValueError(f"shared page {pg} is not live")
+        if reserve_pages < n_fresh or not self.can_reserve(reserve_pages):
             raise ValueError(
-                f"cannot reserve {reserve_pages} pages (mapped now: {n}, "
-                f"unreserved: {self.num_pages - self.reserved_total})")
+                f"cannot reserve {reserve_pages} pages (fresh now: "
+                f"{n_fresh}, unreserved: "
+                f"{self.num_pages - self.reserved_total - self._orphaned})")
         renamed = _rename_kv(prefill_cache)
         if self.pools is None:
+            struct = (jax.eval_shape(_quantize_pool_tree, renamed)
+                      if self.quant is not None else renamed)
             self.pools = jax.tree.map(
                 lambda x: jnp.zeros(
                     x.shape[:1] + (self.num_pages + 1, self.page_size)
                     + x.shape[3:], x.dtype),
-                renamed)
-        pages = [self._free_pages.pop() for _ in range(n)]
-        self.pools, self.table = self._admit_op(
-            self.pools, self.table, renamed,
-            jnp.asarray(pages, jnp.int32), jnp.int32(slot))
+                struct)
+        fresh = [self._free_pages.pop() for _ in range(n_fresh)]
+        pages = shared + fresh
+        for pg in shared:
+            self._refcount[pg] += 1
+        for pg in fresh:
+            self._refcount[pg] = 1
+            self._owner[pg] = slot
+        if n_fresh:
+            self.pools, self.table = self._admit_op(
+                self.pools, self.table, renamed,
+                jnp.asarray(fresh, jnp.int32),
+                jnp.asarray(pages, jnp.int32), jnp.int32(slot),
+                n_shared=len(shared))
+        else:
+            self.table = self._grow_op(self.table,
+                                       jnp.asarray(pages, jnp.int32),
+                                       jnp.int32(slot), jnp.int32(0))
         self._mapped[slot] = pages
+        self._shared[slot] = len(shared)
         self._reserved[slot] = reserve_pages
         self.reserved_total += reserve_pages
-        return n
+        return n_fresh
 
     def ensure_capacity(self, slot: int, last_pos: int) -> int:
         """Map pages so ``slot`` can write through ``last_pos``.
 
         Called at window boundaries for the positions the next decode
-        window will write; within the admission reservation by
-        construction, so the pop below can never find the free list
-        empty.  Returns the number of pages appended (0 almost always —
-        only boundary crossings grow the table).
+        window will write; within the admission reservation (plus the
+        by-reference pages) by construction, so the pop below can never
+        find the free list empty.  Returns the number of pages appended
+        (0 almost always — only boundary crossings grow the table).
         """
         need = last_pos // self.page_size + 1
         have = len(self._mapped[slot])
         if need <= have:
             return 0
-        if need > self._reserved[slot]:
+        if need > self._reserved[slot] + self._shared[slot]:
             raise AssertionError(
                 f"slot {slot} needs {need} pages beyond its reservation "
-                f"of {self._reserved[slot]} — admission under-reserved")
+                f"of {self._reserved[slot]} (+{self._shared[slot]} shared)"
+                " — admission under-reserved")
         pages = [self._free_pages.pop() for _ in range(need - have)]
+        for pg in pages:
+            self._refcount[pg] = 1
+            self._owner[pg] = slot
         self.table = self._grow_op(self.table,
                                    jnp.asarray(pages, jnp.int32),
                                    jnp.int32(slot), jnp.int32(have))
         self._mapped[slot].extend(pages)
         return len(pages)
 
-    def release(self, slot: int) -> None:
-        """Free the slot and its pages; the table row is pointed at the
-        sink page so the released row's masked decode writes can never
-        land in a page a later admission reuses."""
-        self._free_pages.extend(self._mapped[slot])
+    def make_writable(self, slot: int, logical_idx: int) -> bool:
+        """Copy-on-write: give ``slot`` a private copy of its logical
+        page ``logical_idx`` if it is currently shared (refcount > 1).
+
+        The divergent-append primitive: a holder about to write into a
+        shared page copies it into a fresh page (one donated device
+        copy + table entry update) and drops its reference to the
+        shared original, which the other holders keep.  Grows this
+        slot's reservation by the private page (and orphans the
+        original if this slot owned it), so the free list stays
+        underflow-safe.  Returns True iff a copy was made.
+        """
+        pg = self._mapped[slot][logical_idx]
+        if self._refcount[pg] <= 1:
+            return False
+        own = self._owner[pg] == slot
+        # The private page joins this slot's reservation (+1); an
+        # owner-side CoW additionally orphans the original (+1).
+        if not self.can_reserve(2 if own else 1):
+            raise ValueError(
+                f"cannot copy-on-write page {pg}: pool exhausted")
+        new = self._free_pages.pop()
+        self._refcount[pg] -= 1
+        self._refcount[new] = 1
+        self._owner[new] = slot
+        self._reserved[slot] += 1
+        self.reserved_total += 1
+        if own:
+            self._owner[pg] = None
+            self._orphaned += 1
+        else:
+            self._shared[slot] -= 1
+        self.pools, self.table = self._cow_op(
+            self.pools, self.table, jnp.int32(pg), jnp.int32(new),
+            jnp.int32(slot), jnp.int32(logical_idx))
+        self._mapped[slot][logical_idx] = new
+        return True
+
+    def ensure_writable(self, slot: int, first_pos: int,
+                        last_pos: int) -> int:
+        """Copy-on-write every shared page overlapping the position
+        range ``[first_pos, last_pos]`` that ``slot`` is about to write.
+        Returns the number of pages copied (0 in the serve flow — the
+        engine only writes past the full prompt pages sharing covers)."""
+        cows = 0
+        first = first_pos // self.page_size
+        last = min(last_pos // self.page_size,
+                   len(self._mapped[slot]) - 1)
+        for j in range(first, last + 1):
+            cows += bool(self.make_writable(slot, j))
+        return cows
+
+    def release(self, slot: int) -> List[int]:
+        """Decrement the slot's page refcounts, freeing only pages that
+        drain to zero (shared pages survive for their other holders);
+        the table row is pointed at the sink page so the released row's
+        masked decode writes can never land in a page a later admission
+        reuses.  Returns the physical pages actually freed (the engine
+        purges its prefix registry for them)."""
+        freed = []
+        for pg in self._mapped[slot]:
+            self._refcount[pg] -= 1
+            own = self._owner[pg]
+            if own == slot:
+                self._owner[pg] = None
+                if self._refcount[pg] > 0:
+                    self._orphaned += 1
+            if self._refcount[pg] == 0:
+                if own != slot:        # orphaned page just drained
+                    self._orphaned -= 1
+                freed.append(pg)
+                self._free_pages.append(pg)
         self._free_pages.sort(reverse=True)
         self._mapped[slot] = []
         self.reserved_total -= self._reserved[slot]
         self._reserved[slot] = 0
+        self._shared[slot] = 0
         self.table = self._clear_op(self.table, jnp.int32(slot))
         self._free_slots.append(slot)
         self._free_slots.sort(reverse=True)
+        return freed
 
     def reset(self) -> None:
         """Free every slot and page; pool buffers (and stale content —
@@ -244,13 +439,18 @@ class PagedKVCache:
         self._free_pages = list(range(self.num_pages - 1, -1, -1))
         self._mapped = [[] for _ in range(self.max_slots)]
         self._reserved = [0] * self.max_slots
+        self._shared = [0] * self.max_slots
+        self._refcount = [0] * self.num_pages
+        self._owner = [None] * self.num_pages
+        self._orphaned = 0
         self.reserved_total = 0
         self.table = jnp.full((self.max_slots, self.max_pages_per_slot),
                               self.sink, jnp.int32)
 
     def resident_bytes(self) -> int:
-        """Bytes of persistent paged storage: pool (incl. sink page) +
-        page table (0 until the first admission shapes the pool)."""
+        """Bytes of persistent paged storage: pool (incl. sink page and,
+        for int8 pools, the scale planes) + page table (0 until the
+        first admission shapes the pool)."""
         if self.pools is None:
             return 0
         return (sum(x.nbytes for x in jax.tree.leaves(self.pools))
@@ -267,12 +467,17 @@ class PagedServeEngine(SlotServeEngine):
     default matches the dense engine's capacity, and the interesting
     deployments shrink it (a pool a fraction of the dense size serves
     long-context + many-short mixes the dense engine cannot fit —
-    ``benchmarks/serve_bench.py``).
+    ``benchmarks/serve_bench.py``).  ``kv_quant="int8"`` stores the pool
+    quantized (scale planes dequantized inside the attention kernel);
+    ``prefix_sharing`` (default on) maps page-aligned common prompt
+    prefixes to shared refcounted physical pages.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 max_batch: int = 8, max_seq: int = 256, **kw):
+                 max_batch: int = 8, max_seq: int = 256,
+                 kv_quant: Optional[str] = None,
+                 prefix_sharing: bool = True, **kw):
         if (cfg.enc_dec or cfg.moe is not None or cfg.frontend is not None
                 or any(k != ATTN for k in cfg.layer_pattern)):
             raise ValueError(
@@ -282,13 +487,22 @@ class PagedServeEngine(SlotServeEngine):
                 "recurrent states have no sequence axis — see ROADMAP)")
         if CACHE_QUANT["enabled"]:
             raise NotImplementedError(
-                "paged storage does not support the quantized KV cache yet")
+                "paged storage quantizes at the pool boundary "
+                "(kv_quant='int8'), not via the dense CACHE_QUANT flag")
+        if kv_quant not in POOL_QUANTS:
+            raise ValueError(f"kv_quant={kv_quant!r} not in {POOL_QUANTS}")
         if page_size < 1 or page_size > max_seq:
             raise ValueError(f"page_size {page_size} not in [1, {max_seq}]")
         self.page_size = page_size
+        self.kv_quant = kv_quant
+        self.prefix_sharing = prefix_sharing
         self.max_pages_per_slot = -(-max_seq // page_size)
         self.num_pages = (num_pages if num_pages is not None
                           else max_batch * self.max_pages_per_slot)
+        # token-prefix bytes -> physical page, and its reverse (purged
+        # when pages drain back to the free list).
+        self._prefix_registry: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
         super().__init__(cfg, params, max_batch=max_batch, max_seq=max_seq,
                          **kw)
         # Page-aligned prefill caches are a storage invariant here, not
@@ -306,7 +520,9 @@ class PagedServeEngine(SlotServeEngine):
         extras = super()._stats_extras()
         extras.update({"page_admits": 0, "page_grows": 0,
                        "pages_mapped_peak": 0,
-                       "pool_pages": self.num_pages})
+                       "pages_shared": 0, "page_cows": 0,
+                       "pool_pages": self.num_pages,
+                       "kv_pool": self.kv_quant or "f32"})
         return extras
 
     def _prefill_cache_len(self) -> Optional[int]:
@@ -320,7 +536,7 @@ class PagedServeEngine(SlotServeEngine):
 
     def _make_cache(self):
         return PagedKVCache(self.max_batch, self.num_pages, self.page_size,
-                            self.max_pages_per_slot)
+                            self.max_pages_per_slot, quant=self.kv_quant)
 
     def _bucket_len(self, s: int) -> Optional[int]:
         # Page-multiple buckets instead of powers of two: prefill
@@ -328,6 +544,11 @@ class PagedServeEngine(SlotServeEngine):
         # ceil(prompt / page_size) pages — power-of-two padding would
         # map (and waste) pages for pad K/V.
         return -(-max(s, 1) // self.page_size) * self.page_size
+
+    def reset(self) -> None:
+        super().reset()
+        self._prefix_registry.clear()
+        self._page_key.clear()
 
     # -- page accounting ------------------------------------------------
     def _pages_for(self, req: Request) -> int:
@@ -339,17 +560,36 @@ class PagedServeEngine(SlotServeEngine):
         last = min(max(blen - 1, s + budget - 1), self.max_seq - 1)
         return last // self.page_size + 1
 
+    def _probe_shared(self, req: Request) -> List[int]:
+        """Walk the prefix registry: physical pages for the longest
+        chain of ``req``'s page-aligned token prefixes already resident.
+        Causality makes page content a pure function of the token
+        prefix through the page, so a registry hit is a content hit."""
+        if not self.prefix_sharing:
+            return []
+        toks = np.asarray(req.prompt, np.int32)
+        shared: List[int] = []
+        for j in range(len(toks) // self.page_size):
+            pg = self._prefix_registry.get(
+                toks[:(j + 1) * self.page_size].tobytes())
+            if pg is None:
+                break
+            shared.append(pg)
+        return shared
+
     def _admit_cap(self) -> Optional[int]:
         """Page-budget constraint for the ladder sweep: live rows plus
         the prefix of waiting requests (backfilled first — admission
-        order) whose worst-case reservations still fit the pool."""
+        order) whose worst-case exclusive reservations still fit the
+        pool."""
         cap = self._n_active()
-        remaining = self.cache.num_pages - self.cache.reserved_total
+        remaining = (self.cache.num_pages - self.cache.reserved_total
+                     - self.cache.orphaned_pages)
         waiting = [r for r, _, _ in self._backfilled] + list(self.queue)
         for req in waiting:
             if cap >= self.max_batch:
                 break
-            need = self._pages_for(req)
+            need = self._pages_for(req) - len(self._probe_shared(req))
             if need > remaining:
                 break
             cap += 1
@@ -357,12 +597,36 @@ class PagedServeEngine(SlotServeEngine):
         return cap
 
     def _can_admit(self, req: Request) -> bool:
-        return self.cache.can_reserve(self._pages_for(req))
+        return self.cache.can_reserve(
+            self._pages_for(req) - len(self._probe_shared(req)))
 
     def _store_cache(self, req: Request, cache, slot: int) -> None:
-        mapped = self.cache.admit(cache, slot, self._pages_for(req))
-        self.stats["page_admits"] += mapped
+        shared = self._probe_shared(req)
+        fresh = self.cache.admit(cache, slot,
+                                 self._pages_for(req) - len(shared),
+                                 shared_pages=shared)
+        self.stats["page_admits"] += fresh
+        self.stats["pages_shared"] += len(shared)
         self._note_pages_peak()
+        if self.prefix_sharing:
+            # Register this prompt's full pages (fresh ones only — a
+            # shared page's key chain is already resident, and registry
+            # keys always form prefix chains: a page-j key can only
+            # outlive its page-(j-1) key if some holder maps page j
+            # without page j-1, which chains never do).
+            toks = np.asarray(req.prompt, np.int32)
+            pages = self.cache.mapped_pages(slot)
+            for j in range(len(toks) // self.page_size):
+                key = toks[:(j + 1) * self.page_size].tobytes()
+                if key not in self._prefix_registry:
+                    self._prefix_registry[key] = pages[j]
+                    self._page_key[pages[j]] = key
+
+    def _release_slot(self, slot: int) -> None:
+        for pg in self.cache.release(slot):
+            key = self._page_key.pop(pg, None)
+            if key is not None:
+                self._prefix_registry.pop(key, None)
 
     def _note_pages_peak(self) -> None:
         mapped = self.cache.num_pages - self.cache.n_free_pages
@@ -373,17 +637,23 @@ class PagedServeEngine(SlotServeEngine):
     def _window_call(self, rung: int, toks, pos, budget):
         # Map the pages this window can write (bounded by the per-slot
         # budget and max_seq, within each admission's reservation by
-        # construction — the free list cannot underflow here).
+        # construction — the free list cannot underflow).  Shared pages
+        # never overlap write positions in the serve flow (they cover
+        # full prompt pages only), but ensure_writable keeps the
+        # invariant explicit: any write into a shared page would copy
+        # first.
         for slot in range(rung):
             if self._req[slot] is None:
                 continue
             b = int(self._budget[slot])
             if b <= 0:
                 continue
-            last = min(int(self._pos[slot]) + min(self.window, b) - 1,
-                       self.max_seq - 1)
+            first = int(self._pos[slot])
+            last = min(first + min(self.window, b) - 1, self.max_seq - 1)
             self.stats["page_grows"] += self.cache.ensure_capacity(slot,
                                                                    last)
+            self.stats["page_cows"] += self.cache.ensure_writable(
+                slot, first, last)
         self._note_pages_peak()
         self.cache.pools, toks, pos, budget, out = self._window_fn(
             self.params, self.cache.pools, self.cache.table, toks, pos,

@@ -427,6 +427,11 @@ class SlotServeEngine:
     # ------------------------------------------------------------------
     # Serve loop
     # ------------------------------------------------------------------
+    def _release_slot(self, slot: int) -> None:
+        """Return a finished request's storage (hook: the paged engine
+        also retires freed physical pages from its prefix registry)."""
+        self.cache.release(slot)
+
     def _window_call(self, rung: int, toks, pos, budget):
         """Invoke the jitted window at ``rung`` (storage-specific)."""
         self.cache.buffers, toks, pos, budget, out = self._window_fn(
@@ -459,7 +464,7 @@ class SlotServeEngine:
                 req.done = True
                 finished.append(req)
                 self._req[slot] = None
-                self.cache.release(slot)
+                self._release_slot(slot)
                 self.stats["slot_releases"] += 1
 
     def _plan_step(self) -> int:

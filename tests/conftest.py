@@ -5,6 +5,10 @@
 * Installs the deterministic property-testing fallback when the real
   ``hypothesis`` package is not available (hermetic environments); CI
   installs the real one from ``pyproject.toml``.
+* ``REPRO_PALLAS_INTERPRET=1`` (the CI kernel leg) forces every Pallas
+  kernel through the interpreter *and* routes paged-attention decode
+  through the fused kernel instead of the compiled XLA twin — the whole
+  test suite then exercises the real kernel bodies on CPU.
 """
 import importlib.util
 import os
@@ -51,6 +55,22 @@ hypothesis.settings.load_profile(
     os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 
 import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _force_pallas_interpret():
+    """CI kernel leg: run the suite with the Pallas kernel bodies.
+
+    Session-scoped and autouse so the switches flip before any test
+    traces a jit (both are read at trace time — flipping them after a
+    decode fn has been traced would silently test the wrong backend).
+    """
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        from repro.kernels import (set_force_interpret,
+                                   set_paged_attn_backend)
+        set_force_interpret(True)
+        set_paged_attn_backend("pallas_interpret")
+    yield
 
 
 @pytest.hookimpl(hookwrapper=True)

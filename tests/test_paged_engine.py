@@ -4,11 +4,15 @@ Three contracts of the block-granular cache
 (:mod:`repro.serve.paged_engine`):
 
 * **Allocator invariants** (hypothesis state machine over random
-  admit/grow/release sequences on :class:`PagedKVCache`): no physical
-  page is ever mapped by two slots, ``free ∪ mapped`` is exactly the
-  pool at every step, release restores capacity, reservations never
-  over-commit, and a reused page serves its new owner's content — the
-  page-granular extension of PR 4's slot-reuse regression.
+  admit/share-admit/grow/cow/release sequences on
+  :class:`PagedKVCache`): every page's refcount equals the number of
+  slots mapping it, ``free`` is exactly the refcount-0 pages at every
+  step, no page is freed while a holder remains, release decrements
+  (freeing only drained pages) and restores capacity, reservations
+  plus orphaned pages never over-commit the pool, copy-on-write gives
+  the writer a private copy while other holders keep the original, and
+  a reused page serves its new owner's content — the page-granular
+  extension of PR 4's slot-reuse regression.
 * **Compile stability**: paged decode compiles at most once per
   ``SLAB_LADDER`` rung across >=3 batch shapes, and page-table growth
   (decode crossing page boundaries) writes entries into fixed-shape
@@ -42,14 +46,25 @@ def _fake_cache(n_pages: int, fill: float):
     return [{"b0": {"k": leaf, "v": leaf + 0.5}}]
 
 
-def _check_invariants(cache: PagedKVCache, live: dict):
-    mapped = [p for s in range(SLOTS) for p in cache.mapped_pages(s)]
-    free = set(range(PAGES)) - set(mapped)
-    # No double-mapping, free ∪ mapped = pool, counts consistent.
-    assert len(mapped) == len(set(mapped))
-    assert cache.n_free_pages == len(free) == PAGES - len(mapped)
-    assert cache.reserved_total == sum(r for _, r in live.values())
-    assert cache.reserved_total <= PAGES
+def _check_invariants(cache: PagedKVCache, live: dict, owner: dict):
+    holders = {}           # physical page -> number of slots mapping it
+    for s in range(SLOTS):
+        pages = cache.mapped_pages(s)
+        # A slot never maps the same physical page twice.
+        assert len(pages) == len(set(pages))
+        for p in pages:
+            holders[p] = holders.get(p, 0) + 1
+    # Refcounts count holders exactly; free = drained pages only (no
+    # page is freed while any holder remains, none leaks after).
+    for p in range(PAGES):
+        assert cache.page_refcount(p) == holders.get(p, 0), p
+    assert cache.n_free_pages == PAGES - len(holders)
+    # Orphans: occupied pages whose reserving owner released.
+    assert cache.orphaned_pages == sum(
+        1 for p in holders if owner.get(p) is None)
+    # Reservations + orphans never over-commit the pool.
+    assert cache.reserved_total == sum(v["reserve"] for v in live.values())
+    assert cache.reserved_total + cache.orphaned_pages <= PAGES
     table = np.asarray(cache.table)
     for slot in range(SLOTS):
         pages = cache.mapped_pages(slot)
@@ -58,64 +73,141 @@ def _check_invariants(cache: PagedKVCache, live: dict):
         assert (table[slot, len(pages):] == cache.sink).all()
         if slot not in live:
             assert pages == []
-    # Content: every *prompt* page still holds its owner's fill pattern
-    # (reused pages must serve the new owner — no stale leakage).
+        else:
+            assert cache.shared_pages_of(slot) == live[slot]["shared"]
+    # Content: every *prompt* page still holds its descriptor's fill
+    # pattern — reused pages serve the new owner, shared pages serve
+    # every holder, and a CoW copy preserved what it copied.
     if cache.pools is not None:
         pool_k = np.asarray(jax.tree.leaves(cache.pools)[0])[0, :, :, 0, 0]
-        for slot, ((fill, n_prompt), _) in live.items():
-            for j in range(n_prompt):
-                want = fill + j + np.arange(PSZ) / 10.0
+        for slot, v in live.items():
+            for j, (fill, src_j) in enumerate(v["desc"]):
+                want = fill + src_j + np.arange(PSZ) / 10.0
                 got = pool_k[cache.mapped_pages(slot)[j]]
-                np.testing.assert_allclose(got, want, err_msg=f"slot {slot}")
+                np.testing.assert_allclose(got, want,
+                                           err_msg=f"slot {slot} page {j}")
 
 
-OPS = st.lists(st.tuples(st.sampled_from(["admit", "grow", "release"]),
-                         st.integers(0, 7), st.integers(1, PMAX)),
-               min_size=1, max_size=50)
+OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "share", "grow", "cow", "release"]),
+              st.integers(0, 7), st.integers(1, PMAX)),
+    min_size=1, max_size=50)
 
 
 class TestAllocatorStateMachine:
     @settings(max_examples=60, deadline=None)
     @given(ops=OPS)
     def test_page_pool_invariants(self, ops):
-        """Random admit/grow/release programs against a shadow model;
-        every step re-proves the pool invariants and page contents."""
+        """Random admit/share-admit/grow/cow/release programs against a
+        shadow model; every step re-proves refcounts, orphan accounting,
+        reservations, the device table mirror, and page contents."""
         cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
-        live = {}            # slot -> ((fill, n_prompt_pages), reserve)
+        # slot -> {"desc": [(fill, src_page)] per prompt page,
+        #          "reserve": int, "shared": int}
+        live = {}
+        owner = {}           # physical page -> reserving slot or None
         fill_counter = 100.0
+
+        def admit(slot, n, reserve, shared_pages, desc):
+            fresh_before = set(p for p in range(PAGES)
+                               if cache.page_refcount(p) == 0)
+            n_fresh = cache.admit(_fake_cache(n, desc[-1][0] if desc
+                                              else 0.0), slot, reserve,
+                                  shared_pages=shared_pages)
+            assert n_fresh == n - len(shared_pages)
+            for p in cache.mapped_pages(slot)[len(shared_pages):]:
+                assert p in fresh_before   # fresh pages came from free
+                owner[p] = slot
+
         for op, sel, size in ops:
             if op == "admit" and cache.n_free:
                 n = min(size, 3)
                 reserve = min(n + sel % 2, PMAX)
                 if not cache.can_reserve(reserve):
-                    assert cache.num_pages - cache.reserved_total < reserve
+                    assert (cache.num_pages - cache.reserved_total
+                            - cache.orphaned_pages) < reserve
                     continue
                 slot = cache.acquire()
                 fill_counter += 100.0
-                assert cache.admit(_fake_cache(n, fill_counter), slot,
-                                   reserve) == n
-                live[slot] = ((fill_counter, n), reserve)
+                desc = [(fill_counter, j) for j in range(n)]
+                admit(slot, n, reserve, (), desc)
+                live[slot] = {"desc": desc, "reserve": reserve, "shared": 0}
+            elif op == "share" and live and cache.n_free:
+                # Admit a request mapping a live donor's leading prompt
+                # pages by reference (the engine's prefix-sharing path).
+                donor = sorted(live)[sel % len(live)]
+                n_donor = len(live[donor]["desc"])
+                if not n_donor:
+                    continue
+                k = min(size, n_donor)
+                n = min(k + sel % 2, PMAX)       # k shared + maybe fresh
+                reserve = n - k
+                if not cache.can_reserve(reserve):
+                    continue
+                shared = cache.mapped_pages(donor)[:k]
+                refs_before = [cache.page_refcount(p) for p in shared]
+                slot = cache.acquire()
+                fill_counter += 100.0
+                desc = (live[donor]["desc"][:k]
+                        + [(fill_counter, j) for j in range(k, n)])
+                admit(slot, n, reserve, shared, desc)
+                for p, r in zip(shared, refs_before):
+                    assert cache.page_refcount(p) == r + 1
+                live[slot] = {"desc": desc, "reserve": reserve, "shared": k}
             elif op == "grow" and live:
                 slot = sorted(live)[sel % len(live)]
-                reserve = live[slot][1]
-                # Any position within the reservation must be mappable.
-                last = min(size, reserve) * PSZ - 1
+                bound = live[slot]["reserve"] + live[slot]["shared"]
+                # Any position within reservation + shared is mappable.
+                last = min(size, bound) * PSZ - 1
                 grown = cache.ensure_capacity(slot, last)
                 assert len(cache.mapped_pages(slot)) >= last // PSZ + 1
+                for p in cache.mapped_pages(slot):
+                    owner.setdefault(p, slot)
                 assert grown >= 0
+            elif op == "cow" and live:
+                slot = sorted(live)[sel % len(live)]
+                pages = cache.mapped_pages(slot)
+                if not pages:
+                    continue
+                j = sel % len(pages)
+                old = pages[j]
+                refc = cache.page_refcount(old)
+                if refc > 1 and not cache.can_reserve(2):
+                    continue           # pool too tight to copy safely
+                copied = cache.make_writable(slot, j)
+                assert copied == (refc > 1)
+                if copied:
+                    new = cache.mapped_pages(slot)[j]
+                    assert new != old and cache.page_refcount(new) == 1
+                    assert cache.page_refcount(old) == refc - 1
+                    if owner.get(old) == slot:
+                        owner[old] = None       # original orphaned
+                    else:
+                        live[slot]["shared"] -= 1
+                    owner[new] = slot
+                    live[slot]["reserve"] += 1
             elif op == "release" and live:
                 slot = sorted(live)[sel % len(live)]
                 before = cache.n_free_pages
-                n_mapped = len(cache.mapped_pages(slot))
-                cache.release(slot)
-                assert cache.n_free_pages == before + n_mapped
+                held = cache.mapped_pages(slot)
+                drained = [p for p in held if cache.page_refcount(p) == 1]
+                freed = cache.release(slot)
+                # Exactly the drained pages were freed; shared survive.
+                assert sorted(freed) == sorted(drained)
+                assert cache.n_free_pages == before + len(drained)
+                for p in held:
+                    if owner.get(p) == slot:
+                        owner[p] = None
+                for p in freed:
+                    owner.pop(p, None)
                 del live[slot]
-            _check_invariants(cache, live)
+            _check_invariants(cache, live, owner)
         for slot in sorted(live):
             cache.release(slot)
         # Full capacity restored, nothing leaked.
         assert cache.n_free_pages == PAGES
         assert cache.reserved_total == 0
+        assert cache.orphaned_pages == 0
         assert cache.n_free == SLOTS
 
     def test_admit_rejects_over_reservation(self):
@@ -136,6 +228,122 @@ class TestAllocatorStateMachine:
     def test_pool_must_fit_one_full_request(self):
         with pytest.raises(ValueError):
             PagedKVCache(SLOTS, PMAX - 1, PSZ, PMAX)
+
+    def test_shared_page_must_be_live(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        slot = cache.acquire()
+        with pytest.raises(ValueError):
+            cache.admit(_fake_cache(2, 1.0), slot, 1, shared_pages=[3])
+
+
+class TestCopyOnWrite:
+    def _admit_pair(self, cache):
+        """Slot a owns 2 pages; slot b maps both by reference."""
+        a = cache.acquire()
+        cache.admit(_fake_cache(2, 100.0), a, 2)
+        b = cache.acquire()
+        cache.admit(_fake_cache(2, 999.0), b, 0,
+                    shared_pages=cache.mapped_pages(a))
+        return a, b
+
+    def test_divergent_append_copies_for_the_writer_only(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        a, b = self._admit_pair(cache)
+        pg = cache.mapped_pages(a)[1]
+        assert cache.page_refcount(pg) == 2
+        assert cache.make_writable(b, 1)        # sharer-side CoW
+        new = cache.mapped_pages(b)[1]
+        assert new != pg
+        assert cache.page_refcount(pg) == 1
+        assert cache.page_refcount(new) == 1
+        assert cache.shared_pages_of(b) == 1    # page 0 still shared
+        pool_k = np.asarray(jax.tree.leaves(cache.pools)[0])[0, :, :, 0, 0]
+        # The copy preserved the shared content (slot a's fill)...
+        np.testing.assert_allclose(pool_k[new], pool_k[pg])
+        # ...and diverging the copy never touches the original.
+        cache.pools = jax.tree.map(lambda x: x.at[:, new].set(-1.0),
+                                   cache.pools)
+        pool_k = np.asarray(jax.tree.leaves(cache.pools)[0])[0, :, :, 0, 0]
+        np.testing.assert_allclose(pool_k[pg],
+                                   100.0 + 1 + np.arange(PSZ) / 10.0)
+        # Idempotent: the private page never copies again.
+        assert not cache.make_writable(b, 1)
+
+    def test_owner_side_cow_orphans_the_original(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        a, b = self._admit_pair(cache)
+        pg = cache.mapped_pages(a)[0]
+        assert cache.make_writable(a, 0)        # writer owns the page
+        assert cache.mapped_pages(a)[0] != pg
+        assert cache.page_refcount(pg) == 1     # b still holds it
+        assert cache.orphaned_pages == 1        # charged to nobody
+        freed = cache.release(b)
+        assert pg in freed                      # drained with b
+        assert cache.orphaned_pages == 0
+
+    def test_release_keeps_shared_pages_for_survivors(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        a, b = self._admit_pair(cache)
+        shared = cache.mapped_pages(a)
+        assert cache.release(a) == []           # b holds every page
+        assert cache.orphaned_pages == 2
+        assert cache.n_free_pages == PAGES - 2
+        pool_k = np.asarray(jax.tree.leaves(cache.pools)[0])[0, :, :, 0, 0]
+        np.testing.assert_allclose(pool_k[shared[0]],
+                                   100.0 + np.arange(PSZ) / 10.0)
+        assert sorted(cache.release(b)) == sorted(shared)
+        assert cache.n_free_pages == PAGES
+
+    def test_cow_respects_pool_exhaustion(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        a, b = self._admit_pair(cache)
+        c = cache.acquire()
+        cache.admit(_fake_cache(2, 300.0), c, PAGES - 2)  # rest of pool
+        with pytest.raises(ValueError):
+            cache.make_writable(b, 0)
+
+
+class TestQuantPool:
+    def test_int8_pool_layout_and_bytes(self):
+        f32 = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        q = PagedKVCache(SLOTS, PAGES, PSZ, PMAX, quant="int8")
+        for cache in (f32, q):
+            slot = cache.acquire()
+            cache.admit(_fake_cache(2, 1.0), slot, 2)
+        layer = q.pools[0]["b0"]
+        assert set(layer) == {"pk", "pk_s", "pv", "pv_s"}
+        assert layer["pk"].dtype == jnp.int8
+        assert layer["pk_s"].dtype == jnp.bfloat16
+        assert layer["pk_s"].shape == layer["pk"].shape[:-1] + (1,)
+        # int8 values + bf16 scales: (1 + 2/hd) bytes/elem vs 4 — well
+        # under the 0.35x gate headroom at real head dims; the fake
+        # cache's hd=1 still shrinks to 3/4 (scale planes dominate
+        # there, and the shared page table is identical in both).
+        q_pool = q.resident_bytes() - q.table.nbytes
+        f_pool = f32.resident_bytes() - f32.table.nbytes
+        assert q_pool == 0.75 * f_pool, (q_pool, f_pool)
+        assert q.quant == "int8"
+
+    def test_int8_roundtrip_matches_dense_quantizer(self):
+        """Pool cells dequantize to what attention._quant_kv would
+        produce — admitted and decoded tokens share one numeric."""
+        from repro.models.attention import _dequant_kv, _quant_kv
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX, quant="int8")
+        slot = cache.acquire()
+        src = _fake_cache(3, 42.0)
+        cache.admit(src, slot, 3)
+        pages = cache.mapped_pages(slot)
+        layer = cache.pools[0]["b0"]
+        got = np.asarray(
+            _dequant_kv(layer["pk"], layer["pk_s"], jnp.float32)
+        )[0, pages].reshape(1, 1, 3 * PSZ, 1, 1)
+        want = np.asarray(
+            _dequant_kv(*_quant_kv(src[0]["b0"]["k"]), jnp.float32))
+        np.testing.assert_allclose(got, want)
+
+    def test_rejects_unknown_quant(self):
+        with pytest.raises(ValueError):
+            PagedKVCache(SLOTS, PAGES, PSZ, PMAX, quant="fp8")
 
 
 @pytest.fixture(scope="module")
@@ -256,3 +464,71 @@ class TestMemoryFootprint:
                 PagedServeEngine(cfg, params, max_batch=2, max_seq=32)
         finally:
             set_kv_cache_quant(False)
+        with pytest.raises(ValueError):    # pool quant is int8-or-f32
+            PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
+                             kv_quant="fp8")
+
+
+class TestPrefixSharing:
+    def test_common_preamble_dedups_physical_pages(self, setup):
+        """Requests sharing a page-aligned system prompt map the same
+        physical pages (admission refcounts, not copies), emit the same
+        tokens as without sharing, and the registry drains with the
+        pool."""
+        cfg, params = setup
+        rng = np.random.default_rng(11)
+        preamble = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        prompts = [np.concatenate(
+            [preamble, rng.integers(0, cfg.vocab_size, size=ext)
+             .astype(np.int32)]) for ext in (3, 7, 0, 5)]
+        budgets = [5, 4, 6, 3]
+
+        def build(**kw):
+            return PagedServeEngine(cfg, params, max_batch=4, max_seq=64,
+                                    window=4, page_size=8, **kw)
+
+        base = build(prefix_sharing=False)
+        want = _run(base, prompts, budgets)
+        eng = build()
+        got = _run(eng, prompts, budgets)
+        assert got == want
+        # 2 preamble pages x 3 follower requests mapped by reference
+        # (admission order can vary; every follower shares >= the
+        # preamble) and the fresh-page count shrinks by exactly the
+        # shared count.
+        assert eng.stats["pages_shared"] >= 6
+        assert (eng.stats["page_admits"] + eng.stats["pages_shared"]
+                == base.stats["page_admits"])
+        assert eng.stats["page_cows"] == 0   # writes start past prompts
+        # Peak residency: sharing strictly fewer pages mapped at once.
+        assert (eng.stats["pages_mapped_peak"]
+                < base.stats["pages_mapped_peak"])
+        # Everything drains: pool full, registry empty, nothing orphaned.
+        assert eng.cache.n_free_pages == eng.cache.num_pages
+        assert eng.cache.orphaned_pages == 0
+        assert not eng._prefix_registry and not eng._page_key
+
+    def test_sharing_feeds_admission_capacity(self, setup):
+        """A pool that cannot hold two worst-case requests exclusively
+        still serves identical-prompt requests concurrently — the
+        shared pages don't charge the reservation twice."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+        prompts = [prompt, prompt.copy()]
+        # Long enough that the first request is still decoding when the
+        # second's admission re-probes the (now populated) registry.
+        budgets = [6, 6]
+        # Worst case per request: ceil((24 + 3) / 8) = 4 pages; pool of
+        # 6 fits both only because the 3 full prompt pages are shared.
+        eng = PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
+                               window=4, page_size=8, num_pages=6)
+        got = _run(eng, prompts, budgets)
+        noshare = PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
+                                   window=4, page_size=8, num_pages=6,
+                                   prefix_sharing=False)
+        want = _run(noshare, prompts, budgets)
+        assert got == want
+        assert max(eng.stats["rungs"]) == 2       # truly concurrent
+        assert max(noshare.stats["rungs"]) == 1   # serialized without
+        assert eng.stats["pages_shared"] == 3
