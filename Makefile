@@ -2,12 +2,18 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: ci lint docs test bench-smoke bench bench-baseline
+.PHONY: ci lint api docs test bench-smoke bench bench-baseline
 
-ci: lint docs test bench-smoke
+ci: lint api docs test bench-smoke
 
 lint:
 	-ruff check src tests benchmarks scripts || echo "ruff unavailable; CI runs it"
+
+# API gate: engines are constructed via repro.serve.make_engine only;
+# direct constructor calls outside src/repro/serve fail (escape hatch
+# for white-box tests: a trailing '# api-ok' comment).
+api:
+	$(PY) scripts/check_api.py
 
 # Docs gate: public-surface docstrings + ARCHITECTURE.md cross-references.
 docs:

@@ -83,9 +83,9 @@ def _serve(engine, reqs) -> Tuple[float, int, float, dict]:
     t0 = time.perf_counter()
     done = engine.run(max_steps=4096)
     elapsed = time.perf_counter() - t0
-    tokens = sum(len(r.generated) for r in done)
+    tokens = sum(c.n_tokens for c in done)
     ttft = float(np.median(engine.stats["ttft"])) * 1e3
-    return elapsed, tokens, ttft, {r.rid: tuple(r.generated) for r in done}
+    return elapsed, tokens, ttft, {c.rid: c.tokens for c in done}
 
 
 def bench_serving(quick: bool = False) -> List[Row]:
@@ -94,8 +94,7 @@ def bench_serving(quick: bool = False) -> List[Row]:
 
     from repro.configs import smoke_config
     from repro.models import init_params
-    from repro.serve import ServeEngine, SlotServeEngine
-    from repro.serve.serve_step import make_decode_step, make_prefill_step
+    from repro.serve import make_engine
 
     cfg = smoke_config("yi-6b")
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -103,15 +102,12 @@ def bench_serving(quick: bool = False) -> List[Row]:
     max_seq = 64 if quick else 128
     reqs = _workload(quick)
 
-    legacy = ServeEngine(
-        cfg, params,
-        prefill_fn=jax.jit(make_prefill_step(cfg, cache_len=max_seq)),
-        decode_fn=jax.jit(make_decode_step(cfg)), cache_init_fn=None,
-        max_batch=max_batch, max_seq=max_seq)
+    legacy = make_engine(cfg, params, kind="sequential",
+                         max_slots=max_batch, max_seq=max_seq)
     el_legacy, tok_legacy, ttft_legacy, _ = _serve(legacy, reqs)
 
-    slot = SlotServeEngine(cfg, params, max_batch=max_batch,
-                           max_seq=max_seq, window=4 if quick else 8)
+    slot = make_engine(cfg, params, kind="slot", max_slots=max_batch,
+                       max_seq=max_seq, window=4 if quick else 8)
     el_slot, tok_slot, ttft_slot, _ = _serve(slot, reqs)
 
     # Token counts are budget-determined (the workload stays clear of
@@ -124,9 +120,9 @@ def bench_serving(quick: bool = False) -> List[Row]:
     # counter when jax's private jit-cache API is unavailable, so this
     # gate row cannot silently degrade to an always-passing value.
     compiles = slot.stats["decode_compiles"]
-    n_rungs = len(set(slot.stats["rungs"]))
-    hits = slot.stats["prefill_bucket_hits"]
-    misses = slot.stats["prefill_bucket_misses"]
+    n_rungs = len(set(slot.stats["engine"]["rungs"]))
+    hits = slot.stats["engine"]["prefill_bucket_hits"]
+    misses = slot.stats["engine"]["prefill_bucket_misses"]
 
     write_csv("serve", ["engine", "tokens", "elapsed_s", "tok_per_s",
                         "ttft_p50_ms", "decode_compiles"],
@@ -186,7 +182,7 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
     from repro.configs import smoke_config
     from repro.kernels.paged_attn import set_paged_attn_backend
     from repro.models import init_params
-    from repro.serve import PagedServeEngine, SlotServeEngine
+    from repro.serve import make_engine
 
     cfg = smoke_config("yi-6b")
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -211,7 +207,7 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
         shared runner could flip the hard-gated throughput ratios."""
         _serve(eng, reqs)
         compiles = eng.stats["decode_compiles"]
-        rungs = len(set(eng.stats["rungs"]))
+        rungs = len(set(eng.stats["engine"]["rungs"]))
         best = None
         for _ in range(3):
             eng.reset()
@@ -221,8 +217,8 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
         el, tok, ttft, got = best
         return el, tok, ttft, got, compiles, rungs
 
-    slot = SlotServeEngine(cfg, params, max_batch=max_batch,
-                           max_seq=max_seq, window=window)
+    slot = make_engine(cfg, params, kind="slot", max_slots=max_batch,
+                       max_seq=max_seq, window=window)
     el_slot, tok_slot, ttft_slot, want, _, _ = cold_then_warm(slot)
     slot_bytes = slot.cache.resident_bytes()
     tps_slot = tok_slot / el_slot
@@ -233,11 +229,10 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
         # its jits — earlier engines' traces are unaffected).
         set_paged_attn_backend(backend)
         try:
-            eng = PagedServeEngine(cfg, params, max_batch=mb,
-                                   max_seq=max_seq, window=window,
-                                   page_size=page_size,
-                                   num_pages=pages,
-                                   kv_quant=kv_quant)
+            eng = make_engine(cfg, params, kind="paged", max_slots=mb,
+                              max_seq=max_seq, window=window,
+                              page_size=page_size, num_pages=pages,
+                              kv_quant=kv_quant)
             el, tok, ttft, got, compiles, rungs = cold_then_warm(eng)
         finally:
             set_paged_attn_backend(None)
@@ -276,7 +271,7 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
     ratio_bytes = paged_bytes / slot_bytes
     # compiles/n_rungs come from the *cold* pass above (reset() clears
     # the stat and the warm pass compiles nothing by construction).
-    shared = paged.stats["pages_shared"]
+    shared = paged.stats["engine"]["pages_shared"]
 
     write_csv("serve_paged",
               ["engine", "tokens", "elapsed_s", "tok_per_s", "ttft_p50_ms",
@@ -286,15 +281,15 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
                 f"{ttft_slot:.1f}", slot_bytes, "", "", ""),
                ("paged_gather", tok_ga, f"{el_ga:.3f}", f"{tps_ga:.1f}",
                 f"{ttft_ga:.1f}", gather.cache.resident_bytes(), num_pages,
-                gather.stats["pages_mapped_peak"],
-                gather.stats["pages_shared"]),
+                gather.stats["engine"]["pages_mapped_peak"],
+                gather.stats["engine"]["pages_shared"]),
                ("paged_fused", tok_fu, f"{el_fu:.3f}", f"{tps_fu:.1f}",
                 f"{ttft_fu:.1f}", fused.cache.resident_bytes(), num_pages,
-                fused.stats["pages_mapped_peak"],
-                fused.stats["pages_shared"]),
+                fused.stats["engine"]["pages_mapped_peak"],
+                fused.stats["engine"]["pages_shared"]),
                ("paged_fused_int8", tok_q, f"{el_q:.3f}", f"{tps_q:.1f}",
                 f"{ttft_q:.1f}", paged_bytes, 2 * num_pages,
-                paged.stats["pages_mapped_peak"], shared)])
+                paged.stats["engine"]["pages_mapped_peak"], shared)])
     return [
         ("serve_slot_long", el_slot * 1e6 / tok_slot,
          f"{tps_slot:.1f} tok/s, ttft p50 {ttft_slot:.0f}ms, resident KV "
@@ -307,7 +302,7 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
          f"int8 pool + {shared} shared pages, ttft p50 {ttft_q:.0f}ms, "
          f"resident KV {paged_bytes / 1024:.0f}KiB ({ratio_bytes:.2f}x "
          f"slot, {2 * num_pages}-page pool, peak "
-         f"{paged.stats['pages_mapped_peak']})"),
+         f"{paged.stats['engine']['pages_mapped_peak']})"),
         # Metric rows (scaled so the ratio gate == the metric ratio and
         # check_bench's HARD_MAX_US bounds apply absolutely).
         ("serve_paged_kv_bytes", ratio_bytes * 1000.0,
@@ -328,8 +323,112 @@ def bench_serving_paged(quick: bool = False) -> List[Row]:
     ]
 
 
+def bench_serving_frontend(quick: bool = False,
+                           n_requests: int = None) -> List[Row]:
+    """Online Poisson-arrival serve through the request-lifecycle
+    frontend (:class:`repro.serve.ServeFrontend`).
+
+    A seeded Poisson load generator submits the mixed workload against
+    a warmed slot engine; latency is *user-observed* (submission to
+    emitted token, queueing delay included):
+
+    * ``serve_frontend_poisson`` — wall microseconds per generated
+      token for the whole online serve (arrival gaps included, so this
+      row tracks scheduler/emit overhead at fixed load, not raw engine
+      throughput);
+    * ``serve_frontend_ttft_p50`` / ``_p99`` — time-to-first-token
+      percentiles in microseconds;
+    * ``serve_frontend_tpot_p50`` / ``_p99`` — per-token latency
+      percentiles in microseconds;
+    * ``serve_frontend_warm_compiles`` — decode compiles observed
+      *after* AOT warmup x 10_000, hard-gated to 0 in
+      scripts/check_bench.py: steady-state online serving must never
+      compile.
+
+    Before timing, the online token streams are asserted identical to
+    the offline ``run()`` of the same requests — the frontend's
+    coalesced admission is latency policy, never numerics.
+    """
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.serve import make_engine, ServeFrontend
+
+    cfg = smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_batch = 4 if quick else 8
+    max_seq = 64 if quick else 128
+    window = 4 if quick else 8
+    n = n_requests or (12 if quick else 32)
+
+    rng = np.random.default_rng(17)
+    lens = rng.integers(3, 28, size=n)
+    budgets = rng.integers(4, 10, size=n)
+    gaps = rng.exponential(scale=0.002 if quick else 0.004, size=n)
+    prompts = [rng.integers(0, 500, size=int(s)).astype(np.int32)
+               for s in lens]
+    reqs = list(zip(prompts, (int(b) for b in budgets)))
+
+    # Offline reference on an identically configured engine: the online
+    # streams must match token-for-token.
+    offline = make_engine(cfg, params, kind="slot", max_slots=max_batch,
+                          max_seq=max_seq, window=window)
+    _, _, _, want = _serve(offline, reqs)
+
+    eng = make_engine(cfg, params, kind="slot", max_slots=max_batch,
+                      max_seq=max_seq, window=window)
+    fe = ServeFrontend(eng)
+    fe.warmup(max_prompt_len=int(max(lens)))
+    t0 = time.perf_counter()
+    for (prompt, budget), gap in zip(reqs, gaps):
+        time.sleep(gap)
+        fe.submit(prompt, budget)
+    done = fe.drain(timeout=600)
+    elapsed = time.perf_counter() - t0
+    stats = fe.stats
+    metrics = fe.metrics()
+    fe.shutdown()
+
+    got = {c.rid: c.tokens for c in done}
+    assert got == want, "frontend serve diverged from offline run()"
+    compiles = stats["decode_compiles"]
+    tokens = sum(c.n_tokens for c in done)
+    ttft = np.asarray(metrics["ttft"]) * 1e6
+    tpot = np.asarray(metrics["tpot"]) * 1e6
+
+    write_csv("serve_frontend",
+              ["requests", "tokens", "elapsed_s", "coalesced_prefills",
+               "ttft_p50_us", "ttft_p99_us", "tpot_p50_us", "tpot_p99_us",
+               "warm_decode_compiles"],
+              [(n, tokens, f"{elapsed:.3f}", metrics["coalesced_prefills"],
+                f"{np.percentile(ttft, 50):.0f}",
+                f"{np.percentile(ttft, 99):.0f}",
+                f"{np.percentile(tpot, 50):.0f}",
+                f"{np.percentile(tpot, 99):.0f}", compiles)])
+    return [
+        ("serve_frontend_poisson", elapsed * 1e6 / tokens,
+         f"{tokens} tokens online over {n} Poisson arrivals, "
+         f"{metrics['coalesced_prefills']} coalesced prefill flushes, "
+         f"tokens identical to offline run()"),
+        ("serve_frontend_ttft_p50", float(np.percentile(ttft, 50)),
+         "user-observed time-to-first-token p50 (queueing included)"),
+        ("serve_frontend_ttft_p99", float(np.percentile(ttft, 99)),
+         "user-observed time-to-first-token p99 (queueing included)"),
+        ("serve_frontend_tpot_p50", float(np.percentile(tpot, 50)),
+         "user-observed per-token latency p50 (window-granular)"),
+        ("serve_frontend_tpot_p99", float(np.percentile(tpot, 99)),
+         "user-observed per-token latency p99 (window-granular)"),
+        ("serve_frontend_warm_compiles", compiles * 10_000.0,
+         f"{compiles} decode compiles after AOT warmup "
+         f"(hard bound: 0 — steady state never compiles)"),
+    ]
+
+
 if __name__ == "__main__":
     for row in bench_serving(quick=True):
         print(row)
     for row in bench_serving_paged(quick=True):
+        print(row)
+    for row in bench_serving_frontend(quick=True):
         print(row)

@@ -5,13 +5,18 @@
 Submits a mixed queue of short/long prompts, serves them with continuous
 batching where the decode batch size is quantized to the slab ladder by
 the cycle simulator (repro.serve.engine), and reports TTFT + the
-scheduler's batch choices.  The same workload is then replayed on the
-ladder-locked slot engine (repro.serve.slot_engine) — persistent slot
-cache, fixed decode shapes, multi-token windows — which must generate
-identical tokens with at most one decode compile per ladder rung.
-Finally the paged engine (repro.serve.paged_engine) serves it again
-from a page pool at three-eighths of the dense slot reservation:
-identical tokens, a fraction of the resident KV bytes.
+scheduler's batch choices.  Every engine is built through the unified
+factory (``repro.serve.make_engine``) and returns ``Completion``
+records.  The same workload is then replayed on the ladder-locked slot
+engine (repro.serve.slot_engine) — persistent slot cache, fixed decode
+shapes, multi-token windows — which must generate identical tokens with
+at most one decode compile per ladder rung.  The paged engine
+(repro.serve.paged_engine) serves it again from a page pool at
+three-eighths of the dense slot reservation: identical tokens, a
+fraction of the resident KV bytes.  Finally the online frontend
+(repro.serve.frontend) serves the workload under Poisson arrivals after
+AOT warmup: streaming handles, coalesced batched prefills, zero
+steady-state compiles.
 """
 import sys
 sys.path.insert(0, "src")
@@ -23,18 +28,15 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import init_params
-from repro.serve import Request, ServeEngine, SlotServeEngine
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.serve import make_engine, Request, ServeFrontend
 
 
 def main():
     cfg = smoke_config("qwen2.5-0.5b")
     print(f"[serve] model {cfg.name}")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    prefill = jax.jit(make_prefill_step(cfg, cache_len=96))
-    decode = jax.jit(make_decode_step(cfg))
-    eng = ServeEngine(cfg, params, prefill_fn=prefill, decode_fn=decode,
-                      cache_init_fn=None, max_batch=8, max_seq=96)
+    eng = make_engine(cfg, params, kind="sequential", max_slots=8,
+                      max_seq=96)
 
     rng = np.random.default_rng(0)
     # paper Fig 1a: chatbot prompts, median ~12 tokens, long tail
@@ -64,7 +66,8 @@ def main():
 
     # Same workload on the ladder-locked fast path: slot cache, fixed
     # SLAB_LADDER decode shapes, on-device multi-token windows.
-    slot = SlotServeEngine(cfg, params, max_batch=8, max_seq=96, window=8)
+    slot = make_engine(cfg, params, kind="slot", max_slots=8, max_seq=96,
+                       window=8)
     rng = np.random.default_rng(0)
     for i, L in enumerate(lengths):
         slot.submit(Request(
@@ -75,34 +78,34 @@ def main():
     done_slot = slot.run(max_steps=256)
     dt_slot = time.time() - t0
     st = slot.stats
+    ext = st["engine"]
     print(f"[slot]  completed {len(done_slot)}/{len(lengths)} requests "
           f"in {dt_slot*1e3:.0f}ms host time ({dt/max(dt_slot, 1e-9):.2f}x)")
     print(f"[slot]  TTFT p50={np.median(st['ttft'])*1e3:.1f}ms; "
-          f"{st['windows']} windows at rungs {sorted(set(st['rungs']))}; "
+          f"{ext['windows']} windows at rungs {sorted(set(ext['rungs']))}; "
           f"{st['decode_compiles']} decode compiles; prefill buckets "
-          f"{st['prefill_bucket_hits']}h/{st['prefill_bucket_misses']}m")
+          f"{ext['prefill_bucket_hits']}h/{ext['prefill_bucket_misses']}m")
     # Guaranteed: identical stop rules -> identical token *counts* per
     # request (the workload stays clear of the max_seq edge).  Value
     # identity on mixed-length batches is reported, not asserted: the
     # sequential engine shares pos=max(positions) across rows, so its
     # short-row numerics deviate slightly from the per-slot reference
     # (see repro.serve.slot_engine docs) even though argmax agrees here.
-    counts_ok = ({r.rid: len(r.generated) for r in done_slot}
-                 == {r.rid: len(r.generated) for r in done})
-    same = ({r.rid: tuple(r.generated) for r in done_slot}
-            == {r.rid: tuple(r.generated) for r in done})
+    counts_ok = ({c.rid: c.n_tokens for c in done_slot}
+                 == {c.rid: c.n_tokens for c in done})
+    same = ({c.rid: c.tokens for c in done_slot}
+            == {c.rid: c.tokens for c in done})
     print(f"[slot]  tokens identical to sequential engine: {same}")
     assert counts_ok and len(done_slot) == len(lengths)
     if st["decode_compiles"] is not None:
-        assert st["decode_compiles"] <= len(set(st["rungs"]))
+        assert st["decode_compiles"] <= len(set(ext["rungs"]))
 
     # Same workload again on paged storage: the dense slot engine's
     # reservation is 8 slots x 96 positions = 64 pages of 12; a 24-page
     # pool is 0.375x that.  Tokens must be identical to the slot
     # engine on any workload — rows are independent in both.
-    from repro.serve import PagedServeEngine
-    paged = PagedServeEngine(cfg, params, max_batch=8, max_seq=96,
-                             window=8, page_size=12, num_pages=24)
+    paged = make_engine(cfg, params, kind="paged", max_slots=8,
+                        max_seq=96, window=8, page_size=12, num_pages=24)
     rng = np.random.default_rng(0)
     for i, L in enumerate(lengths):
         paged.submit(Request(
@@ -112,7 +115,7 @@ def main():
     t0 = time.time()
     done_paged = paged.run(max_steps=256)
     dt_paged = time.time() - t0
-    pt = paged.stats
+    pt = paged.stats["engine"]
     ratio = (paged.cache.resident_bytes()
              / max(slot.cache.resident_bytes(), 1))
     print(f"[paged] completed {len(done_paged)}/{len(lengths)} requests "
@@ -120,10 +123,47 @@ def main():
           f"{ratio:.2f}x slot engine ({pt['pool_pages']}-page pool, "
           f"peak {pt['pages_mapped_peak']} mapped, "
           f"{pt['page_grows']} boundary grows)")
-    same_paged = ({r.rid: tuple(r.generated) for r in done_paged}
-                  == {r.rid: tuple(r.generated) for r in done_slot})
+    same_paged = ({c.rid: c.tokens for c in done_paged}
+                  == {c.rid: c.tokens for c in done_slot})
     print(f"[paged] tokens identical to slot engine: {same_paged}")
     assert same_paged and ratio < 0.6
+
+    # Online: the same workload arrives over time through the
+    # request-lifecycle frontend — thread-safe submit() returning
+    # streaming handles, same-bucket arrivals coalesced into batched
+    # prefills, AOT warmup so steady state never compiles.
+    fresh = make_engine(cfg, params, kind="slot", max_slots=8,
+                        max_seq=96, window=8)
+    fe = ServeFrontend(fresh)
+    t0 = time.time()
+    fe.warmup(max_prompt_len=64)
+    print(f"[front] AOT warmup in {(time.time()-t0)*1e3:.0f}ms "
+          f"(every (rung, bucket) prefill + decode window)")
+    rng = np.random.default_rng(0)
+    gaps = np.random.default_rng(1).exponential(scale=0.002,
+                                                size=len(lengths))
+    t0 = time.time()
+    for i, L in enumerate(lengths):
+        time.sleep(gaps[i])
+        fe.submit(rng.integers(2, cfg.vocab_size, size=L).astype(np.int32),
+                  max_new_tokens=8)
+    done_online = fe.drain(timeout=120)
+    dt_online = time.time() - t0
+    fstats = fe.stats
+    m = fe.metrics()
+    fe.shutdown()
+    same_online = ({c.rid: c.tokens for c in done_online}
+                   == {c.rid: c.tokens for c in done_slot})
+    print(f"[front] completed {m['completed']}/{len(lengths)} Poisson "
+          f"arrivals in {dt_online*1e3:.0f}ms; "
+          f"{m['coalesced_prefills']} coalesced prefill flushes; "
+          f"user-observed TTFT p50="
+          f"{np.median(m['ttft'])*1e3:.1f}ms")
+    print(f"[front] tokens identical to offline slot engine: "
+          f"{same_online}; decode compiles after warmup: "
+          f"{fstats['decode_compiles']}")
+    assert same_online
+    assert fstats["decode_compiles"] == 0
 
 
 if __name__ == "__main__":

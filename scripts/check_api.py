@@ -1,0 +1,79 @@
+"""API gate: the serving-engine factory is the single construction path.
+
+PR 7 unified engine construction behind ``repro.serve.make_engine``
+(one ``kind`` selector + one frozen ``EngineOptions`` record).  The
+legacy constructors keep working — the factory routes through them —
+but every *caller* outside ``src/repro/serve`` must go through the
+factory, or constructor-signature drift starts fanning out across
+examples, benches, and tests again.
+
+This lint fails on any direct ``ServeEngine(`` / ``SlotServeEngine(`` /
+``PagedServeEngine(`` call outside ``src/repro/serve``.  White-box
+tests that deliberately exercise a raw constructor (fake step
+functions, error-path probes) opt out per line with an ``# api-ok``
+comment.
+
+Usage:
+    python scripts/check_api.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+EXEMPT_PREFIX = os.path.join("src", "repro", "serve") + os.sep
+CONSTRUCTORS = ("ServeEngine", "SlotServeEngine", "PagedServeEngine")
+# Immediate open-paren, and no attribute/quote/backtick prefix: prose
+# mentions in docstrings and error messages don't trip the gate.
+CALL = re.compile(r"(?<![\w.`'\"])(%s)\(" % "|".join(CONSTRUCTORS))
+
+
+def iter_files():
+    for top in SCAN_DIRS:
+        root = os.path.join(REPO, top)
+        for dirpath, _dirs, files in os.walk(root):
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(dirpath, name)
+
+
+def check_file(path: str) -> list:
+    failures = []
+    rel = os.path.relpath(path, REPO)
+    if rel.startswith(EXEMPT_PREFIX):
+        return failures
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            m = CALL.search(line)
+            if not m:
+                continue
+            if "# api-ok" in line:
+                continue
+            if line.lstrip().startswith(("#", "class ")):
+                continue
+            failures.append(
+                f"{rel}:{lineno}: direct {m.group(1)}() call — construct "
+                "engines via repro.serve.make_engine (or mark a "
+                "deliberate white-box use with '# api-ok')")
+    return failures
+
+
+def main() -> int:
+    failures = []
+    n = 0
+    for path in iter_files():
+        n += 1
+        failures.extend(check_file(path))
+    if failures:
+        print("api gate FAILED:", *failures, sep="\n  ")
+        return 1
+    print(f"api gate passed: {n} files scanned, every engine constructed "
+          "through make_engine")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,6 +52,10 @@ HARD_MAX_US = {
     # the slot engine's concurrency at < 0.35x its KV bytes) must beat
     # the dense slot engine's warm serving throughput outright.
     "serve_paged_fused_tps": 1_000.0,
+    # decode compiles observed after the frontend's AOT warmup x 10_000:
+    # steady-state online serving must never compile (ISSUE 7 acceptance
+    # bound — zero, not merely bounded).
+    "serve_frontend_warm_compiles": 0.0,
 }
 
 

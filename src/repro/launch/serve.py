@@ -13,8 +13,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import init_params
-from repro.serve import Request, ServeEngine
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.serve import make_engine, Request
 
 
 def main(argv=None):
@@ -24,16 +23,15 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--engine", default="sequential",
+                    choices=["sequential", "slot", "paged"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     print(f"[launch.serve] arch={cfg.name} devices={jax.device_count()}")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    prefill = jax.jit(make_prefill_step(cfg, cache_len=args.max_seq))
-    decode = jax.jit(make_decode_step(cfg))
-    eng = ServeEngine(cfg, params, prefill_fn=prefill, decode_fn=decode,
-                      cache_init_fn=None, max_batch=8,
+    eng = make_engine(cfg, params, kind=args.engine, max_slots=8,
                       max_seq=args.max_seq)
     rng = np.random.default_rng(args.seed)
     # paper Fig 1a prompt-length distribution: median 12, mean ~42

@@ -329,11 +329,14 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
                     ) -> Tuple[Array, List[PyTree]]:
     """Process a prompt; return (last-position logits, filled cache).
 
-    ``logits_index`` (traced scalar) selects which position's logits to
-    return instead of the static last position — the bucketed-prefill
-    path pads prompts to a shape bucket and reads the logits of the last
-    *real* token, so one compilation serves every prompt length in the
-    bucket (causal masking makes trailing pad tokens invisible to it).
+    ``logits_index`` (traced scalar or per-row ``(B,)`` vector) selects
+    which position's logits to return instead of the static last
+    position — the bucketed-prefill path pads prompts to a shape bucket
+    and reads the logits of the last *real* token, so one compilation
+    serves every prompt length in the bucket (causal masking makes
+    trailing pad tokens invisible to it).  The vector form is the
+    coalesced multi-prompt prefill: each batch row carries its own
+    last-token position, one gather instead of a shared slice.
     """
     enc_out = None
     if cfg.enc_dec:
@@ -360,7 +363,10 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
         x, cache = jax.lax.scan(body, x, gp)
         caches.append(cache)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    if logits_index is not None:
+    if logits_index is not None and jnp.ndim(logits_index) >= 1:
+        idx = logits_index.astype(jnp.int32)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+    elif logits_index is not None:
         x_last = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
     else:
         x_last = x[:, -1:]

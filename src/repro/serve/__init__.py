@@ -1,11 +1,16 @@
+from repro.serve.api import (Completion, completion_of, EngineOptions,
+                             make_engine, STATS_KEYS, validate_stats)
 from repro.serve.engine import choose_decode_batch, Request, ServeEngine
+from repro.serve.frontend import RequestHandle, ServeFrontend
 from repro.serve.paged_engine import PagedKVCache, PagedServeEngine
 from repro.serve.serve_step import (cache_specs, make_bucketed_prefill_step,
                                     make_decode_step, make_paged_decode_step,
                                     make_prefill_step)
 from repro.serve.slot_engine import SlotKVCache, SlotServeEngine
 
-__all__ = ["cache_specs", "make_bucketed_prefill_step", "make_decode_step",
+__all__ = ["cache_specs", "Completion", "completion_of", "EngineOptions",
+           "make_bucketed_prefill_step", "make_decode_step", "make_engine",
            "make_paged_decode_step", "make_prefill_step", "PagedKVCache",
-           "PagedServeEngine", "Request", "ServeEngine", "SlotKVCache",
-           "SlotServeEngine", "choose_decode_batch"]
+           "PagedServeEngine", "Request", "RequestHandle", "ServeEngine",
+           "ServeFrontend", "SlotKVCache", "SlotServeEngine", "STATS_KEYS",
+           "choose_decode_batch", "validate_stats"]

@@ -68,6 +68,7 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
 
 def _llm_workload_of(cfg: ModelConfig) -> LLMWorkload:
@@ -183,11 +184,16 @@ def init_serve_stats(coexec_backend: Optional[str],
     if expert_backend is not None:
         from repro.models.moe import set_expert_backend
         set_expert_backend(expert_backend)
+    # Exactly the shared schema of repro.serve.api.STATS_KEYS —
+    # engine-specific extras go under the "engine" namespace, never at
+    # the top level (validate_stats enforces this).
     return {"batches": [], "ttft": [], "decode_steps": 0,
+            "decode_compiles": None,
             "packed_speedup": [], "packed_prefills": 0,
             "backfilled": 0, "coexec_tiles": [], "coexec_interleave": [],
             "coexec_backend": coexec_backend,
-            "expert_backend": expert_backend or EXPERT_BACKEND["impl"]}
+            "expert_backend": expert_backend or EXPERT_BACKEND["impl"],
+            "engine": {}}
 
 
 def record_step_packing(stats: Dict[str, Any], decode_bsz: int,
@@ -273,94 +279,113 @@ class ServeEngine:
         self._backfilled.append((req, cache, pos))
         self.stats["backfilled"] += 1
 
-    def run(self, max_steps: int = 512) -> List[Request]:
-        """Serve everything in the queue (greedy decoding)."""
+    def step(self, finished: List[Request], max_steps: int = 512) -> int:
+        """One scheduler iteration: admit a ladder batch and serve it to
+        completion.  Returns the number of decode steps consumed (0 when
+        there is no work) — the granularity the online frontend drives;
+        the slot engines override this with a window-boundary step.
+        """
+        if not (self.queue or self._backfilled) or max_steps <= 0:
+            return 0
+        budget = max_steps
+        # Admission: SISA-aware batch size over live requests.  A
+        # backfilled request *is* live (its prefill already ran);
+        # counting it as a pending prefill again would double-book
+        # its GEMMs against this step's ladder quantization.
+        n_live = len(self.queue) + len(self._backfilled)
+        bsz = choose_decode_batch(n_live, self.cfg, self.max_batch)
+        bsz = max(1, min(bsz, n_live, self.max_batch))
+        self.stats["batches"].append(bsz)
+        # Backfilled requests first (FIFO — they were at the queue
+        # front when backfilled, so batch composition matches the
+        # sequential path exactly), then fresh queue admits.
+        active: List[Request] = []
+        caches, positions = [], []
+        while self._backfilled and len(active) < bsz:
+            r, cache, pos_r = self._backfilled.popleft()
+            active.append(r)
+            caches.append(cache)
+            positions.append(pos_r)
+        fresh = [self.queue.popleft()
+                 for _ in range(bsz - len(active))]
+        active += fresh
+        n_pre = 0
+        if self.multi_tenant:
+            # Co-schedule this step on the slab array: decode GEMMs
+            # of the admitted batch packed with the waiting prompts'
+            # prefill GEMMs on idle slab groups.  Already-backfilled
+            # prefills are excluded — their work is done.
+            waiting = [len(r.prompt) for r in self.queue]
+            # The placement is lowered to the fused kernel's
+            # grid-task order when coexec is set: adjacent-task
+            # tenant switches are the interleaving the fused grid
+            # would execute for this step.
+            n_pre = record_step_packing(
+                self.stats, bsz, waiting, self.cfg,
+                bool(self.coexec_backend))
+        # Prefill each fresh admit (latency-sensitive, slab-mode
+        # skewed GEMMs), then batch the decode loop.
+        for r in fresh:
+            cache, pos_r = self._prefill_one(r)
+            caches.append(cache)
+            positions.append(pos_r)
+        # Co-execution: the prefills the packer placed on this
+        # step's idle slabs run inside the decode window below.
+        to_backfill: List[Request] = []
+        if self.coexec_backend and self.multi_tenant:
+            nb = min(n_pre, len(self.queue))
+            to_backfill = [self.queue.popleft() for _ in range(nb)]
+        batched_cache = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1), *caches)
+        pos = max(positions)
+        live = list(active)
+        while live and budget > 0:
+            toks = jnp.asarray([[r.generated[-1]] for r in live],
+                               jnp.int32)
+            logits, batched_cache = self.decode_fn(
+                self.params, batched_cache, toks, jnp.int32(pos))
+            self.stats["decode_steps"] += 1
+            pos += 1
+            budget -= 1
+            if to_backfill:
+                # One co-resident prefill per decode iteration — the
+                # serving-level interleave of the fused grid axis.
+                self._backfill_one(to_backfill.pop(0))
+            nxt = np.asarray(
+                jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
+            still = []
+            for i, r in enumerate(live):
+                r.generated.append(int(nxt[i]))
+                if len(r.generated) >= r.max_new_tokens \
+                        or pos >= self.max_seq - 1:
+                    r.done = True
+                    r.finished_at = time.time()
+                    finished.append(r)
+                else:
+                    still.append(r)
+            if len(still) != len(live):
+                # shrink the batch (release finished rows)
+                keep = [i for i, r in enumerate(live) if not r.done]
+                if keep:
+                    idx = jnp.asarray(keep)
+                    batched_cache = jax.tree.map(
+                        lambda x: x[:, idx], batched_cache)
+                live = still
+        # Decode drained before every co-scheduled prefill ran:
+        # finish them now, still within this step's window.
+        for r in to_backfill:
+            self._backfill_one(r)
+        from repro.serve.slot_engine import jit_cache_entries
+        entries = jit_cache_entries(self.decode_fn)
+        if entries is not None:
+            self.stats["decode_compiles"] = entries
+        return max_steps - budget
+
+    def run(self, max_steps: int = 512) -> List["Completion"]:
+        """Serve everything in the queue (greedy decoding); returns one
+        :class:`~repro.serve.api.Completion` per finished request."""
+        from repro.serve.api import completion_of
         finished: List[Request] = []
         while (self.queue or self._backfilled) and max_steps > 0:
-            # Admission: SISA-aware batch size over live requests.  A
-            # backfilled request *is* live (its prefill already ran);
-            # counting it as a pending prefill again would double-book
-            # its GEMMs against this step's ladder quantization.
-            n_live = len(self.queue) + len(self._backfilled)
-            bsz = choose_decode_batch(n_live, self.cfg, self.max_batch)
-            bsz = max(1, min(bsz, n_live, self.max_batch))
-            self.stats["batches"].append(bsz)
-            # Backfilled requests first (FIFO — they were at the queue
-            # front when backfilled, so batch composition matches the
-            # sequential path exactly), then fresh queue admits.
-            active: List[Request] = []
-            caches, positions = [], []
-            while self._backfilled and len(active) < bsz:
-                r, cache, pos_r = self._backfilled.popleft()
-                active.append(r)
-                caches.append(cache)
-                positions.append(pos_r)
-            fresh = [self.queue.popleft()
-                     for _ in range(bsz - len(active))]
-            active += fresh
-            n_pre = 0
-            if self.multi_tenant:
-                # Co-schedule this step on the slab array: decode GEMMs
-                # of the admitted batch packed with the waiting prompts'
-                # prefill GEMMs on idle slab groups.  Already-backfilled
-                # prefills are excluded — their work is done.
-                waiting = [len(r.prompt) for r in self.queue]
-                # The placement is lowered to the fused kernel's
-                # grid-task order when coexec is set: adjacent-task
-                # tenant switches are the interleaving the fused grid
-                # would execute for this step.
-                n_pre = record_step_packing(
-                    self.stats, bsz, waiting, self.cfg,
-                    bool(self.coexec_backend))
-            # Prefill each fresh admit (latency-sensitive, slab-mode
-            # skewed GEMMs), then batch the decode loop.
-            for r in fresh:
-                cache, pos_r = self._prefill_one(r)
-                caches.append(cache)
-                positions.append(pos_r)
-            # Co-execution: the prefills the packer placed on this
-            # step's idle slabs run inside the decode window below.
-            to_backfill: List[Request] = []
-            if self.coexec_backend and self.multi_tenant:
-                nb = min(n_pre, len(self.queue))
-                to_backfill = [self.queue.popleft() for _ in range(nb)]
-            batched_cache = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=1), *caches)
-            pos = max(positions)
-            live = list(active)
-            while live and max_steps > 0:
-                toks = jnp.asarray([[r.generated[-1]] for r in live],
-                                   jnp.int32)
-                logits, batched_cache = self.decode_fn(
-                    self.params, batched_cache, toks, jnp.int32(pos))
-                self.stats["decode_steps"] += 1
-                pos += 1
-                max_steps -= 1
-                if to_backfill:
-                    # One co-resident prefill per decode iteration — the
-                    # serving-level interleave of the fused grid axis.
-                    self._backfill_one(to_backfill.pop(0))
-                nxt = np.asarray(
-                    jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
-                still = []
-                for i, r in enumerate(live):
-                    r.generated.append(int(nxt[i]))
-                    if len(r.generated) >= r.max_new_tokens \
-                            or pos >= self.max_seq - 1:
-                        r.done = True
-                        finished.append(r)
-                    else:
-                        still.append(r)
-                if len(still) != len(live):
-                    # shrink the batch (release finished rows)
-                    keep = [i for i, r in enumerate(live) if not r.done]
-                    if keep:
-                        idx = jnp.asarray(keep)
-                        batched_cache = jax.tree.map(
-                            lambda x: x[:, idx], batched_cache)
-                    live = still
-            # Decode drained before every co-scheduled prefill ran:
-            # finish them now, still within this step's window.
-            for r in to_backfill:
-                self._backfill_one(r)
-        return finished
+            max_steps -= self.step(finished, max_steps)
+        return [completion_of(r) for r in finished]

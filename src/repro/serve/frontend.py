@@ -1,0 +1,387 @@
+"""Online request-lifecycle frontend: async intake over the ladder loop.
+
+The engines' ``run()`` is an offline host loop — every request must be
+queued up front, and results only exist when the whole queue drains.
+This module adds the arrival-rate axis the ROADMAP's serving story
+needs: an always-on service wrapping one engine, with
+
+* **Thread-safe intake**: :meth:`ServeFrontend.submit` can be called
+  from any thread at any time; it returns a :class:`RequestHandle`
+  immediately (streaming token list, completion event, optional
+  per-token callback) and parks the request on an intake queue.
+
+* **Window-boundary scheduling**: a single scheduler thread owns the
+  engine.  Each cycle it (1) admits arrivals up to the engine's free
+  capacity, *coalescing same-bucket prompts into one batched
+  multi-prompt prefill-insert per bucket*
+  (:meth:`~repro.serve.slot_engine.SlotServeEngine.prefill_batch`) so a
+  burst of k arrivals costs one ``(rung, bucket)`` prefill call instead
+  of k, (2) drives one engine ``step()`` — one decode window — and
+  (3) flushes every newly generated token onto a backlog queue.  The
+  engine is never touched off this thread, so the engines stay
+  single-threaded internally.
+
+* **Detokenize/emit thread**: a second thread drains the backlog into
+  per-request delivery — appending to the handle's token stream and
+  invoking its callback in strict per-request order (tokens, then the
+  :class:`~repro.serve.api.Completion`).  Decode windows never block on
+  user callbacks.
+
+* **Graceful drain/shutdown**: :meth:`drain` blocks until everything
+  in flight has completed; :meth:`shutdown` drains (or aborts, when
+  ``drain=False`` — inflight handles resolve with
+  ``finish_reason="aborted"``) and joins both threads.
+
+* **AOT warmup**: :meth:`warmup` pre-compiles every ``(rung, bucket)``
+  prefill and decode-window entry point via the engine's
+  :meth:`~repro.serve.slot_engine.SlotServeEngine.warmup`, so steady
+  state serves with ``stats["decode_compiles"] == 0`` — the serving
+  loop is exactly as compile-stable online as offline.
+
+Token identity: the slot/paged engines' rows are batch-invariant and
+their batched prefill is bitwise the single-prompt prefill per row, so
+the frontend's reordered, coalesced admission produces exactly the
+tokens of the offline ``run()`` on the same requests (pinned in
+``tests/test_frontend.py``).  The sequential engine is served too, but
+its mixed-length batches are not batch-invariant — no identity claim.
+
+TTFT/TPOT here are *user-observed*: stamped at emission by the emit
+thread (submission -> first delivered token; mean gap thereafter), not
+at the engine's internal prefill, so queueing delay under load is part
+of the number — that is the point of the Poisson rows in
+``benchmarks/serve_bench.py``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.api import (Completion, FINISH_ABORTED, FINISH_LENGTH,
+                             FINISH_MAX_SEQ)
+from repro.serve.engine import Request
+
+_SHUTDOWN = object()
+
+
+class _Done:
+    """Backlog sentinel: all of ``req``'s tokens precede it in the
+    backlog, so delivery order per request is tokens-then-completion."""
+
+    def __init__(self, req: Request, aborted: bool = False):
+        self.req = req
+        self.aborted = aborted
+
+
+class RequestHandle:
+    """Streaming view of one in-flight request.
+
+    ``tokens`` snapshots the delivered stream so far; ``result()``
+    blocks for the :class:`~repro.serve.api.Completion`.  The
+    ``on_token`` callback (if given) runs on the emit thread, once per
+    token, in generation order; a raising callback never disturbs the
+    serve (the exception is kept on ``callback_error``).
+    """
+
+    def __init__(self, rid: int, max_new_tokens: int,
+                 on_token: Optional[Callable[[int], None]] = None):
+        self.rid = rid
+        self.max_new_tokens = max_new_tokens
+        self.submitted_at = time.time()
+        self.first_emitted_at: Optional[float] = None
+        self.callback_error: Optional[BaseException] = None
+        self._on_token = on_token
+        self._tokens: List[int] = []
+        self._lock = threading.Lock()
+        self._done = threading.Event()
+        self._completion: Optional[Completion] = None
+
+    @property
+    def tokens(self) -> List[int]:
+        with self._lock:
+            return list(self._tokens)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Completion:
+        """Block until the request completes; returns its Completion."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still in flight")
+        return self._completion
+
+    # Emit-thread side ---------------------------------------------------
+    def _deliver(self, toks: Sequence[int]) -> None:
+        for t in toks:
+            if self.first_emitted_at is None:
+                self.first_emitted_at = time.time()
+            with self._lock:
+                self._tokens.append(t)
+            if self._on_token is not None:
+                try:
+                    self._on_token(t)
+                except BaseException as e:  # noqa: B036 - user callback
+                    self.callback_error = e
+                    self._on_token = None
+
+    def _finish(self, completion: Completion) -> None:
+        self._completion = completion
+        self._done.set()
+
+
+class ServeFrontend:
+    """Always-on serving service over one engine (see module docs).
+
+    Threads start lazily at the first :meth:`submit` (or explicitly via
+    :meth:`start`); the instance is a context manager whose exit drains
+    and shuts down.  Only the scheduler thread ever touches the engine;
+    :attr:`stats` and :meth:`metrics` take the same mutex, so they can
+    be read at any time.
+    """
+
+    def __init__(self, engine, *, idle_wait: float = 0.002):
+        self.engine = engine
+        self.idle_wait = idle_wait
+        self._intake: "queue.Queue" = queue.Queue()
+        self._backlog: "queue.Queue" = queue.Queue()
+        self._mutex = threading.Lock()      # engine + tracking state
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._abort = threading.Event()
+        # rid -> (req, handle, n_emitted); scheduler thread only.
+        self._tracked: Dict[int, List[Any]] = {}
+        self._handles: List[RequestHandle] = []
+        self._completions: List[Completion] = []
+        self._next_rid = 0
+        self._started = False
+        self._scheduler_t: Optional[threading.Thread] = None
+        self._emitter_t: Optional[threading.Thread] = None
+        self.coalesced_prefills = 0          # batched-prefill admissions
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "ServeFrontend":
+        if self._started:
+            return self
+        self._started = True
+        self._scheduler_t = threading.Thread(target=self._scheduler,
+                                             name="serve-scheduler",
+                                             daemon=True)
+        self._emitter_t = threading.Thread(target=self._emitter,
+                                           name="serve-emit", daemon=True)
+        self._scheduler_t.start()
+        self._emitter_t.start()
+        return self
+
+    def __enter__(self) -> "ServeFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=exc == (None, None, None))
+
+    def warmup(self, max_prompt_len: Optional[int] = None,
+               rungs: Optional[Sequence[int]] = None) -> None:
+        """AOT-compile every serving entry point before taking load
+        (engines without a ``warmup`` hook — the sequential engine —
+        no-op; their compile stability is per batch shape)."""
+        with self._mutex:
+            if hasattr(self.engine, "warmup"):
+                self.engine.warmup(max_prompt_len, rungs=rungs)
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               rid: Optional[int] = None,
+               on_token: Optional[Callable[[int], None]] = None
+               ) -> RequestHandle:
+        """Enqueue one request; returns its streaming handle at once."""
+        if self._stop.is_set():
+            raise RuntimeError("frontend is shut down")
+        with self._mutex:
+            if rid is None:
+                rid = self._next_rid
+            self._next_rid = max(self._next_rid, rid) + 1
+        handle = RequestHandle(rid, max_new_tokens, on_token)
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens,
+                      arrived=handle.submitted_at)
+        with self._mutex:
+            self._handles.append(handle)
+        self.start()
+        self._intake.put((req, handle))
+        self._wake.set()
+        return handle
+
+    def drain(self, timeout: Optional[float] = None) -> List[Completion]:
+        """Block until every submitted request has completed; returns
+        all completions so far in submission order."""
+        deadline = None if timeout is None else time.time() + timeout
+        with self._mutex:
+            pending = list(self._handles)
+        for h in pending:
+            left = None if deadline is None else deadline - time.time()
+            if not h._done.wait(left if left is None else max(left, 0)):
+                raise TimeoutError(
+                    f"drain timed out with request {h.rid} in flight")
+        with self._mutex:
+            return list(self._completions)
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the service.  ``drain=True`` finishes inflight work
+        first; ``drain=False`` aborts it (handles resolve with
+        ``finish_reason="aborted"``).  Idempotent; joins both threads."""
+        if self._started and drain and not self._stop.is_set():
+            self.drain(timeout)
+        if not drain:
+            self._abort.set()
+        self._stop.set()
+        self._wake.set()
+        if not self._started:
+            return
+        self._scheduler_t.join(timeout=30)
+        self._backlog.put(_SHUTDOWN)
+        self._emitter_t.join(timeout=30)
+
+    # -- scheduler thread ------------------------------------------------
+    def _free_capacity(self) -> int:
+        eng = self.engine
+        active = eng._n_active() if hasattr(eng, "_n_active") else 0
+        inflight = active + len(eng.queue) + len(eng._backfilled)
+        return max(eng.max_batch - inflight, 0)
+
+    def _intake_flush(self) -> bool:
+        """Admit arrivals up to the engine's free capacity, coalescing
+        same-bucket prompts into one batched prefill-insert each."""
+        with self._mutex:
+            cap = self._free_capacity()
+        batch: List[Tuple[Request, RequestHandle]] = []
+        while len(batch) < cap:
+            try:
+                batch.append(self._intake.get_nowait())
+            except queue.Empty:
+                break
+        if not batch:
+            return False
+        with self._mutex:
+            for req, handle in batch:
+                self._tracked[req.rid] = [req, handle, 0]
+            eng = self.engine
+            if hasattr(eng, "prefill_batch"):
+                # Same-bucket arrivals prefill as one batched call; the
+                # rows park decode-ready in the engine's backfill queue
+                # and the next window admits them FIFO.
+                key = (lambda item: eng._bucket_len(len(item[0].prompt))
+                       or len(item[0].prompt))
+                ordered = sorted(batch, key=key)
+                eng.prefill_batch([req for req, _ in ordered])
+                self.coalesced_prefills += 1
+            else:
+                for req, _ in batch:
+                    eng.submit(req)
+            # The engines' submit() stamps arrival at queue time;
+            # restore the true submission stamps.
+            for req, handle in batch:
+                req.arrived = handle.submitted_at
+            self._emit_new()
+        return True
+
+    def _emit_new(self) -> None:
+        """Push every not-yet-emitted token to the backlog (called with
+        the mutex held, scheduler thread only)."""
+        for rid in list(self._tracked):
+            req, handle, n = self._tracked[rid]
+            fresh = req.generated[n:]
+            if fresh:
+                self._backlog.put((handle, list(fresh)))
+                self._tracked[rid][2] = n + len(fresh)
+            if req.done:
+                self._backlog.put((handle, _Done(req)))
+                del self._tracked[rid]
+
+    def _scheduler(self) -> None:
+        finished: List[Request] = []
+        while True:
+            if self._abort.is_set():
+                break
+            moved = self._intake_flush()
+            with self._mutex:
+                consumed = self.engine.step(finished)
+                self._emit_new()
+                finished.clear()
+            if self._stop.is_set() and not consumed and not moved \
+                    and self._intake.empty():
+                break
+            if not moved and not consumed:
+                self._wake.wait(self.idle_wait)
+                self._wake.clear()
+        if self._abort.is_set():
+            self._abort_inflight()
+
+    def _abort_inflight(self) -> None:
+        with self._mutex:
+            leftovers = list(self._tracked.values())
+            self._tracked.clear()
+            while True:
+                try:
+                    req, handle = self._intake.get_nowait()
+                except queue.Empty:
+                    break
+                leftovers.append([req, handle, 0])
+        for req, handle, _n in leftovers:
+            self._backlog.put((handle, _Done(req, aborted=True)))
+
+    # -- emit thread -----------------------------------------------------
+    def _emitter(self) -> None:
+        while True:
+            item = self._backlog.get()
+            if item is _SHUTDOWN:
+                break
+            handle, payload = item
+            if isinstance(payload, _Done):
+                completion = self._completion_for(payload, handle)
+                with self._mutex:
+                    self._completions.append(completion)
+                handle._finish(completion)
+            else:
+                handle._deliver(payload)
+
+    def _completion_for(self, done: _Done, handle: RequestHandle
+                        ) -> Completion:
+        req = done.req
+        n = len(req.generated)
+        first = handle.first_emitted_at or handle.submitted_at
+        now = time.time()
+        if done.aborted:
+            reason = FINISH_ABORTED
+        elif n >= req.max_new_tokens:
+            reason = FINISH_LENGTH
+        else:
+            reason = FINISH_MAX_SEQ
+        return Completion(
+            rid=req.rid, tokens=tuple(req.generated),
+            ttft=max(0.0, first - handle.submitted_at),
+            tpot=max(0.0, (now - first) / (n - 1)) if n > 1 else 0.0,
+            finish_reason=reason)
+
+    # -- observability ---------------------------------------------------
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Snapshot of the wrapped engine's stats (shared schema)."""
+        import copy
+        with self._mutex:
+            return copy.deepcopy(self.engine.stats)
+
+    def metrics(self) -> Dict[str, Any]:
+        """Frontend-level service metrics (user-observed latency)."""
+        with self._mutex:
+            comps = list(self._completions)
+            return {
+                "submitted": len(self._handles),
+                "completed": len(comps),
+                "inflight": len(self._handles) - len(comps),
+                "coalesced_prefills": self.coalesced_prefills,
+                "ttft": [c.ttft for c in comps],
+                "tpot": [c.tpot for c in comps if c.n_tokens > 1],
+            }

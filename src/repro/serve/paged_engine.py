@@ -570,9 +570,20 @@ class PagedServeEngine(SlotServeEngine):
         toks = np.asarray(req.prompt, np.int32)
         shared: List[int] = []
         for j in range(len(toks) // self.page_size):
-            pg = self._prefix_registry.get(
-                toks[:(j + 1) * self.page_size].tobytes())
+            key = toks[:(j + 1) * self.page_size].tobytes()
+            pg = self._prefix_registry.get(key)
             if pg is None:
+                break
+            if (self.cache.page_refcount(pg) < 1
+                    or self._page_key.get(pg) != key):
+                # Stale hit: the page drained (or was remapped) behind
+                # the registry — e.g. the storage was reset without
+                # engine.reset().  Mapping it would alias a free or
+                # foreign page into this request, so drop the entry and
+                # stop the chain here instead.
+                self._prefix_registry.pop(key, None)
+                if self._page_key.get(pg) == key:
+                    self._page_key.pop(pg, None)
                 break
             shared.append(pg)
         return shared
@@ -605,8 +616,8 @@ class PagedServeEngine(SlotServeEngine):
         fresh = self.cache.admit(cache, slot,
                                  self._pages_for(req) - len(shared),
                                  shared_pages=shared)
-        self.stats["page_admits"] += fresh
-        self.stats["pages_shared"] += len(shared)
+        self.stats["engine"]["page_admits"] += fresh
+        self.stats["engine"]["pages_shared"] += len(shared)
         self._note_pages_peak()
         if self.prefix_sharing:
             # Register this prompt's full pages (fresh ones only — a
@@ -630,8 +641,8 @@ class PagedServeEngine(SlotServeEngine):
 
     def _note_pages_peak(self) -> None:
         mapped = self.cache.num_pages - self.cache.n_free_pages
-        if mapped > self.stats["pages_mapped_peak"]:
-            self.stats["pages_mapped_peak"] = mapped
+        if mapped > self.stats["engine"]["pages_mapped_peak"]:
+            self.stats["engine"]["pages_mapped_peak"] = mapped
 
     # -- window over the page pool ---------------------------------------
     def _window_call(self, rung: int, toks, pos, budget):
@@ -650,9 +661,9 @@ class PagedServeEngine(SlotServeEngine):
                 continue
             first = int(self._pos[slot])
             last = min(first + min(self.window, b) - 1, self.max_seq - 1)
-            self.stats["page_grows"] += self.cache.ensure_capacity(slot,
-                                                                   last)
-            self.stats["page_cows"] += self.cache.ensure_writable(
+            ext = self.stats["engine"]
+            ext["page_grows"] += self.cache.ensure_capacity(slot, last)
+            ext["page_cows"] += self.cache.ensure_writable(
                 slot, first, last)
         self._note_pages_peak()
         self.cache.pools, toks, pos, budget, out = self._window_fn(

@@ -56,13 +56,14 @@ from __future__ import annotations
 
 from collections import deque
 import time
-from typing import Any, Callable, Deque, List, Optional, Tuple
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, LOCAL, ModelConfig
+from repro.serve.api import completion_of, Completion
 from repro.serve.engine import (choose_decode_batch, init_serve_stats,
                                 note_first_token, record_step_packing,
                                 Request, SLAB_LADDER)
@@ -161,6 +162,7 @@ class SlotServeEngine:
                  decode_fn: Optional[Callable] = None,
                  cache_init_fn: Optional[Callable] = None,
                  max_batch: int = 8, max_seq: int = 256, window: int = 8,
+                 ladder: Optional[Sequence[int]] = None,
                  multi_tenant: bool = True,
                  prefill_bucketing: bool = True,
                  prefill_is_bucketed: Optional[bool] = None,
@@ -174,13 +176,14 @@ class SlotServeEngine:
         self.window = window
         self.multi_tenant = multi_tenant
         self.stats = init_serve_stats(coexec_backend, expert_backend)
-        self.stats.update(self._stats_extras())
+        self.stats["engine"].update(self._stats_extras())
         self.coexec_backend = coexec_backend
         self._expert_backend = expert_backend
 
         # Ladder rungs available at this engine's max_batch; decode only
         # ever compiles at these batch shapes.
-        rungs = sorted({b for b in SLAB_LADDER if b <= max_batch}
+        source = SLAB_LADDER if ladder is None else tuple(ladder)
+        rungs = sorted({b for b in source if b <= max_batch}
                        | {max_batch})
         self.rungs: Tuple[int, ...] = tuple(rungs)
 
@@ -207,8 +210,16 @@ class SlotServeEngine:
             self._bucket_cap = min(max_seq, cfg.sliding_window)
         self._seen_buckets: set = set()
 
+        # Batched multi-prompt prefill needs the builtin bucketed step
+        # (vector last_index); injected prefill_fns opt in by setting
+        # this attribute after construction.
+        self._batch_prefill = self._bucket_enabled and prefill_fn is None
+
         self.decode_fn = decode_fn or self._default_decode_fn()
         self._window_traces = 0     # re-trace count; see _build_window_fn
+        # decode compiles reported relative to this base — warmup() sets
+        # it to the post-warmup count so steady state reads 0.
+        self._compile_base = 0
         self._window_fn = self._build_window_fn()
 
         self.cache = self._make_cache()
@@ -224,10 +235,13 @@ class SlotServeEngine:
     # Subclass hooks (the paged engine swaps storage + decode step but
     # keeps the ladder/window/admission policy).
     def _stats_extras(self) -> dict:
-        """Engine-specific keys merged into the shared serve stats."""
+        """Engine-specific keys, namespaced under ``stats["engine"]``
+        (the top level is exactly the shared schema of
+        ``repro.serve.api.STATS_KEYS``)."""
         return {
-            "windows": 0, "rungs": [], "decode_compiles": 0,
+            "windows": 0, "rungs": [],
             "prefill_bucket_hits": 0, "prefill_bucket_misses": 0,
+            "prefill_batches": 0, "prefill_batched_reqs": 0,
             "slot_admits": 0, "slot_releases": 0,
         }
 
@@ -258,7 +272,7 @@ class SlotServeEngine:
         self.cache.reset()
         self.stats = init_serve_stats(self.coexec_backend,
                                       self._expert_backend)
-        self.stats.update(self._stats_extras())
+        self.stats["engine"].update(self._stats_extras())
 
     # ------------------------------------------------------------------
     # Jitted multi-token decode window
@@ -331,16 +345,16 @@ class SlotServeEngine:
             b = self._bucket_len(s)
             if b is not None:
                 if b in self._seen_buckets:
-                    self.stats["prefill_bucket_hits"] += 1
+                    self.stats["engine"]["prefill_bucket_hits"] += 1
                 else:
                     self._seen_buckets.add(b)
-                    self.stats["prefill_bucket_misses"] += 1
+                    self.stats["engine"]["prefill_bucket_misses"] += 1
                 padded = np.zeros(b, np.int32)
                 padded[:s] = req.prompt
                 tokens = padded[None]
             else:
                 # Bucket would overflow a cache capacity: exact length.
-                self.stats["prefill_bucket_misses"] += 1
+                self.stats["engine"]["prefill_bucket_misses"] += 1
                 tokens = np.asarray(req.prompt[None], np.int32)
             batch = {"tokens": jnp.asarray(tokens),
                      "last_index": jnp.int32(s - 1)}
@@ -415,7 +429,7 @@ class SlotServeEngine:
             # least one decode step).
             self._budget[slot] = max(1, req.max_new_tokens
                                      - len(req.generated))
-            self.stats["slot_admits"] += 1
+            self.stats["engine"]["slot_admits"] += 1
 
     def _current_rung(self) -> int:
         highest = max((i + 1 for i, r in enumerate(self._req)
@@ -444,10 +458,10 @@ class SlotServeEngine:
         budget = jnp.asarray(self._budget[:rung])
         toks, pos, budget, out = self._window_call(rung, toks, pos, budget)
         entries = jit_cache_entries(self._window_fn)
-        self.stats["decode_compiles"] = (entries if entries is not None
-                                         else self._window_traces)
-        self.stats["windows"] += 1
-        self.stats["rungs"].append(rung)
+        raw = entries if entries is not None else self._window_traces
+        self.stats["decode_compiles"] = max(0, raw - self._compile_base)
+        self.stats["engine"]["windows"] += 1
+        self.stats["engine"]["rungs"].append(rung)
         self.stats["decode_steps"] += self.window
         # The single host sync of the window:
         out_np = np.asarray(out)                         # (T, rung)
@@ -462,10 +476,11 @@ class SlotServeEngine:
             req.generated.extend(int(t) for t in col[col >= 0])
             if self._budget[slot] <= 0:
                 req.done = True
+                req.finished_at = time.time()
                 finished.append(req)
                 self._req[slot] = None
                 self._release_slot(slot)
-                self.stats["slot_releases"] += 1
+                self.stats["engine"]["slot_releases"] += 1
 
     def _plan_step(self) -> int:
         """Multi-tenant co-schedule of this window (stats + backfill
@@ -480,8 +495,40 @@ class SlotServeEngine:
         return record_step_packing(self.stats, self._n_active(), waiting,
                                    self.cfg, bool(self.coexec_backend))
 
-    def run(self, max_steps: int = 512) -> List[Request]:
-        """Serve everything in the queue (greedy decoding).
+    def step(self, finished: List[Request], max_steps: int = 512) -> int:
+        """One scheduler iteration at a window boundary: admit up to the
+        ladder target, run one decode window, then execute co-scheduled
+        prefills in the sync gap.  Appends newly finished requests to
+        ``finished`` and returns the decode steps consumed (0 when
+        idle).  This is the granularity the online frontend drives —
+        between two calls the engine state is at a window boundary, so
+        the frontend can inject batched prefills and read fresh tokens.
+        """
+        if not (self.queue or self._backfilled or self._n_active()) \
+                or max_steps <= 0:
+            return 0
+        self._admit()
+        n_pre = self._plan_step()
+        to_backfill: List[Request] = []
+        if self.coexec_backend and self.multi_tenant:
+            nb = min(n_pre, len(self.queue))
+            to_backfill = [self.queue.popleft() for _ in range(nb)]
+        rung = self._current_rung()
+        if rung:
+            self._run_window(rung, finished)
+            consumed = self.window
+        else:
+            consumed = 1
+        # Co-scheduled prefills run at the window boundary (the
+        # fused grid interleaves them with the decode window on the
+        # array; at the host level they fill the sync gap).
+        for r in to_backfill:
+            self._backfill_one(r)
+        return consumed
+
+    def run(self, max_steps: int = 512) -> List[Completion]:
+        """Serve everything in the queue (greedy decoding); returns one
+        :class:`~repro.serve.api.Completion` per finished request.
 
         ``max_steps`` counts decode iterations like the sequential
         engine; the slot engine consumes them ``window`` at a time.
@@ -489,21 +536,121 @@ class SlotServeEngine:
         finished: List[Request] = []
         while ((self.queue or self._backfilled or self._n_active())
                and max_steps > 0):
-            self._admit()
-            n_pre = self._plan_step()
-            to_backfill: List[Request] = []
-            if self.coexec_backend and self.multi_tenant:
-                nb = min(n_pre, len(self.queue))
-                to_backfill = [self.queue.popleft() for _ in range(nb)]
-            rung = self._current_rung()
-            if rung:
-                self._run_window(rung, finished)
-                max_steps -= self.window
+            max_steps -= self.step(finished, max_steps)
+        return [completion_of(r) for r in finished]
+
+    # ------------------------------------------------------------------
+    # Online-frontend hooks: coalesced prefill + AOT warmup
+    # ------------------------------------------------------------------
+    def prefill_batch(self, reqs: List[Request]) -> None:
+        """Coalesced multi-prompt prefill: one batched call for a group
+        of same-bucket prompts, each row parked decode-ready in the
+        backfill queue (admitted FIFO by the next ``step``, never
+        re-prefilled).
+
+        The batch axis pads to the smallest ladder rung covering the
+        group (dummy rows replicate row 0 and are discarded), so with
+        power-of-two buckets the prefill entry points form the same
+        finite ``(rung, bucket)`` grid as the decode windows — the set
+        :meth:`warmup` pre-compiles.  Rows are independent in prefill
+        exactly as in decode, so each row's logits and cache are
+        bitwise those of its single-prompt prefill (pinned in
+        ``tests/test_frontend.py``); engines without a vector-index
+        prefill (injected ``prefill_fn``, exact-length configs) fall
+        back to serial single prefills.
+        """
+        groups: List[Tuple[Optional[int], List[Request]]] = []
+        for req in reqs:
+            b = self._bucket_len(len(req.prompt))
+            if groups and groups[-1][0] == b and b is not None:
+                groups[-1][1].append(req)
             else:
-                max_steps -= 1
-            # Co-scheduled prefills run at the window boundary (the
-            # fused grid interleaves them with the decode window on the
-            # array; at the host level they fill the sync gap).
-            for r in to_backfill:
-                self._backfill_one(r)
-        return finished
+                groups.append((b, [req]))
+        for b, group in groups:
+            if not self._batch_prefill or b is None or len(group) == 1:
+                for req in group:
+                    self._backfill_one(req)
+                continue
+            for i in range(0, len(group), self.rungs[-1]):
+                self._prefill_group(group[i:i + self.rungs[-1]], b)
+
+    def _prefill_group(self, group: List[Request], b: int) -> None:
+        k = len(group)
+        rung = next(r for r in self.rungs if r >= k)
+        sig = (rung, b)
+        if sig in self._seen_buckets:
+            self.stats["engine"]["prefill_bucket_hits"] += 1
+        else:
+            self._seen_buckets.add(sig)
+            self.stats["engine"]["prefill_bucket_misses"] += 1
+        toks = np.zeros((rung, b), np.int32)
+        last = np.zeros(rung, np.int32)
+        for i in range(rung):
+            src = group[i] if i < k else group[0]
+            toks[i, :len(src.prompt)] = src.prompt
+            last[i] = len(src.prompt) - 1
+        logits, cache = self.prefill_fn(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "last_index": jnp.asarray(last)})
+        for i, req in enumerate(group):
+            note_first_token(req, logits[i:i + 1], self.cfg.vocab_size,
+                             self.stats)
+            row = jax.tree.map(lambda x, i=i: x[:, i:i + 1], cache)
+            self._backfilled.append((req, row, len(req.prompt)))
+        self.stats["engine"]["prefill_batches"] += 1
+        self.stats["engine"]["prefill_batched_reqs"] += k
+
+    def _warm_storage(self) -> None:
+        """Admit (and keep) one dummy request so the decode-window
+        warmup below runs against allocated storage — slot buffers for
+        the dense engine, pools + a valid table row for the paged one."""
+        dummy = Request(rid=-1, prompt=np.zeros(1, np.int32),
+                        max_new_tokens=1)
+        self.submit(dummy)
+        self._admit()
+
+    def warmup(self, max_prompt_len: Optional[int] = None,
+               rungs: Optional[Sequence[int]] = None) -> None:
+        """AOT-compile every serving entry point so steady state runs
+        with zero compiles (``stats["decode_compiles"] == 0`` from the
+        first real window onward).
+
+        Traces the single-prompt prefill for every bucket covering
+        prompts up to ``max_prompt_len`` (default: the engine's bucket
+        capacity), the batched multi-prompt prefill at every
+        ``(rung, bucket)`` pair, and the decode window at every rung,
+        then resets all serving state.  Compile caches survive the
+        reset, and the decode-compile counter is re-based so the stat
+        reports compiles *since warmup*.
+        """
+        max_len = min(max_prompt_len or self._bucket_cap, self._bucket_cap)
+        warm_rungs = tuple(r for r in self.rungs
+                           if rungs is None or r in set(rungs))
+        buckets = sorted({self._bucket_len(s)
+                          for s in range(1, max_len + 1)} - {None})
+        for b in buckets:
+            probe = Request(rid=-1, prompt=np.zeros(b, np.int32),
+                            max_new_tokens=1)
+            self._backfill_one(probe)          # scalar-index signature
+            if self._batch_prefill:
+                for rung in warm_rungs:
+                    if rung < 2:
+                        continue               # k==1 takes the scalar path
+                    group = [Request(rid=-i - 1,
+                                     prompt=np.zeros(b, np.int32),
+                                     max_new_tokens=1)
+                             for i in range(rung)]
+                    self._prefill_group(group, b)
+            self._backfilled.clear()
+        self._warm_storage()
+        for rung in warm_rungs:
+            # Budget-0 rows are frozen: the window computes and discards
+            # their logits, and released rows only write the sink/own
+            # slot, so warmup mutates no live state besides storage.
+            zeros = jnp.zeros(rung, jnp.int32)
+            self._window_call(rung, zeros, zeros, zeros)
+        self.reset()
+        entries = jit_cache_entries(self._window_fn)
+        self._compile_base = (entries if entries is not None
+                              else self._window_traces)
+        self.stats["decode_compiles"] = 0

@@ -1,0 +1,161 @@
+"""Unified serving API: factory, options record, result contract,
+stats schema (``repro.serve.api``).
+
+The factory is the single blessed construction path (direct
+constructors outside ``repro/serve`` fail ``scripts/check_api.py``), so
+this suite pins its routing: ``kind`` selects the engine class, options
+and keyword overrides merge via ``dataclasses.replace``, non-option
+keywords (test-injection hooks) pass through to the constructor, and
+the sequential kind self-assembles the jitted prefill/decode steps its
+legacy constructor demanded from every caller.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import (Completion, completion_of, EngineOptions,
+                         make_engine, PagedServeEngine, Request,
+                         ServeEngine, SlotServeEngine, STATS_KEYS,
+                         validate_stats)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestFactory:
+    def test_kind_selects_engine_class(self, setup):
+        cfg, params = setup
+        assert isinstance(make_engine(cfg, params, kind="sequential"),
+                          ServeEngine)
+        slot = make_engine(cfg, params, kind="slot")
+        assert isinstance(slot, SlotServeEngine)
+        assert not isinstance(slot, PagedServeEngine)
+        assert isinstance(make_engine(cfg, params, kind="paged"),
+                          PagedServeEngine)
+
+    def test_unknown_kind_rejected(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError, match="kind"):
+            make_engine(cfg, params, kind="continuous")
+
+    def test_overrides_layer_on_options(self, setup):
+        """Keyword overrides win over the options record, which wins
+        over the defaults."""
+        cfg, params = setup
+        opts = EngineOptions(max_slots=4, window=2)
+        eng = make_engine(cfg, params, kind="slot", options=opts,
+                          window=16)
+        assert eng.max_batch == 4          # from options
+        assert eng.window == 16            # override wins
+        assert opts.window == 2            # the record itself untouched
+
+    def test_paged_knobs_reach_the_engine(self, setup):
+        cfg, params = setup
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=64, page_size=8, num_pages=24,
+                          prefix_sharing=False)
+        assert eng.page_size == 8
+        assert eng.cache.num_pages == 24
+        assert not eng.prefix_sharing
+
+    def test_ladder_override(self, setup):
+        cfg, params = setup
+        eng = make_engine(cfg, params, kind="slot", max_slots=2,
+                          ladder=(1, 2))
+        assert tuple(eng.rungs) == (1, 2)
+
+    def test_sequential_autobuilds_steps(self, setup):
+        """The factory supplies the jitted prefill/decode steps the
+        legacy constructor requires — and an injected prefill_fn is
+        honored verbatim (the test-hook passthrough)."""
+        cfg, params = setup
+        eng = make_engine(cfg, params, kind="sequential")
+        assert eng.prefill_fn is not None and eng.decode_fn is not None
+
+        def probe(p, batch):
+            raise AssertionError("never traced here")
+
+        eng2 = make_engine(cfg, params, kind="sequential",
+                           prefill_fn=probe)
+        assert eng2.prefill_fn is probe
+
+
+class TestEngineOptions:
+    def test_frozen(self):
+        opts = EngineOptions()
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            opts.max_slots = 16
+
+    def test_bucket_mode_validated(self):
+        with pytest.raises(ValueError, match="buckets"):
+            EngineOptions(buckets="pow2")
+
+    @pytest.mark.parametrize("ladder", [(), (4, 2), (2, 2, 4), (0, 1)])
+    def test_ladder_validated(self, ladder):
+        with pytest.raises(ValueError, match="ladder"):
+            EngineOptions(ladder=ladder)
+
+    def test_ladder_normalized_to_tuple(self):
+        assert EngineOptions(ladder=[1, 2, 8]).ladder == (1, 2, 8)
+
+
+class TestCompletion:
+    def _req(self, n, budget):
+        req = Request(rid=7, prompt=np.zeros(4, np.int32),
+                      max_new_tokens=budget, arrived=100.0)
+        req.generated.extend(range(n))
+        req.first_token_at = 100.5
+        req.finished_at = 102.5
+        return req
+
+    def test_budget_exhausted_is_length(self):
+        c = completion_of(self._req(n=5, budget=5))
+        assert isinstance(c, Completion)
+        assert c.rid == 7
+        assert c.tokens == (0, 1, 2, 3, 4)
+        assert c.n_tokens == 5
+        assert c.finish_reason == "length"
+        assert c.ttft == pytest.approx(0.5)
+        assert c.tpot == pytest.approx(2.0 / 4)
+
+    def test_early_stop_is_max_seq(self):
+        c = completion_of(self._req(n=3, budget=9))
+        assert c.finish_reason == "max_seq"
+
+    def test_single_token_has_zero_tpot(self):
+        c = completion_of(self._req(n=1, budget=1))
+        assert c.tpot == 0.0
+
+    def test_frozen_result(self):
+        c = completion_of(self._req(n=2, budget=2))
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            c.tokens = ()
+
+
+class TestStatsSchema:
+    def test_every_kind_emits_the_schema(self, setup):
+        cfg, params = setup
+        for kind in ("sequential", "slot", "paged"):
+            stats = make_engine(cfg, params, kind=kind).stats
+            validate_stats(stats)
+            assert set(stats) == STATS_KEYS
+
+    def test_validate_rejects_drift(self, setup):
+        cfg, params = setup
+        stats = make_engine(cfg, params, kind="slot").stats
+        with_extra = dict(stats, slot_admits=0)
+        with pytest.raises(AssertionError, match="non-schema"):
+            validate_stats(with_extra)
+        missing = {k: v for k, v in stats.items() if k != "ttft"}
+        with pytest.raises(AssertionError, match="missing"):
+            validate_stats(missing)
+        with pytest.raises(AssertionError, match="not a dict"):
+            validate_stats(dict(stats, engine=None))

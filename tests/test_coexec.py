@@ -158,9 +158,8 @@ class TestEngineCoexec:
 
         from repro.configs import smoke_config
         from repro.models import init_params
-        from repro.serve import Request, ServeEngine, SlotServeEngine
+        from repro.serve import make_engine, Request
         from repro.serve.serve_step import (make_bucketed_prefill_step,
-                                            make_decode_step,
                                             make_prefill_step)
         cfg = smoke_config("yi-6b")
         params = init_params(cfg, jax.random.PRNGKey(0))
@@ -174,10 +173,10 @@ class TestEngineCoexec:
                 counts[rid] = counts.get(rid, 0) + 1
                 return prefill(p, batch)
 
-            eng = ServeEngine(cfg, params, prefill_fn=counted_prefill,
-                              decode_fn=jax.jit(make_decode_step(cfg)),
-                              cache_init_fn=None, max_batch=2, max_seq=64,
-                              coexec_backend=coexec_backend)
+            eng = make_engine(cfg, params, kind="sequential",
+                              max_slots=2, max_seq=64,
+                              coexec_backend=coexec_backend,
+                              prefill_fn=counted_prefill)
         else:
             prefill = jax.jit(make_bucketed_prefill_step(cfg, cache_len=64))
 
@@ -187,17 +186,18 @@ class TestEngineCoexec:
                 counts[rid] = counts.get(rid, 0) + 1
                 return prefill(p, batch)
 
-            eng = SlotServeEngine(cfg, params, prefill_fn=counted_prefill,
-                                  prefill_is_bucketed=True, max_batch=2,
-                                  max_seq=64, window=4,
-                                  coexec_backend=coexec_backend)
+            eng = make_engine(cfg, params, kind="slot", max_slots=2,
+                              max_seq=64, window=4,
+                              coexec_backend=coexec_backend,
+                              prefill_fn=counted_prefill,
+                              prefill_is_bucketed=True)
         rng = np.random.default_rng(0)
         for i in range(5):
             eng.submit(Request(rid=i, prompt=rng.integers(
                 0, cfg.vocab_size, size=6).astype(np.int32),
                 max_new_tokens=3))
         done = eng.run(max_steps=200)
-        tokens = {r.rid: tuple(r.generated) for r in done}
+        tokens = {c.rid: c.tokens for c in done}
         return tokens, counts, eng.stats
 
     def test_coexec_tokens_match_sequential_and_no_double_prefill(self):
@@ -242,7 +242,7 @@ class TestEngineCoexec:
         # Ladder-locked decode: at most one compile per rung used.
         if slot_stats["decode_compiles"] is not None:
             assert (slot_stats["decode_compiles"]
-                    <= len(set(slot_stats["rungs"])))
+                    <= len(set(slot_stats["engine"]["rungs"])))
 
     def test_backfilled_requests_counted_live_not_waiting(self):
         """The step after a backfill must quantize its ladder over the
@@ -267,7 +267,7 @@ class TestEngineCoexec:
         def fake_decode(params, cache, toks, pos):
             return jnp.zeros((toks.shape[0], 1, cfg.vocab_size)), cache
 
-        eng = ServeEngine(cfg, None, prefill_fn=fake_prefill,
+        eng = ServeEngine(cfg, None, prefill_fn=fake_prefill,  # api-ok
                           decode_fn=fake_decode, cache_init_fn=None,
                           max_batch=1, max_seq=32,
                           coexec_backend="pallas_interpret")

@@ -1,0 +1,228 @@
+"""Online request-lifecycle frontend (``repro.serve.frontend``).
+
+The headline claim is *serving-path transparency*: the frontend's
+asynchronous intake, coalesced batched prefills, and window-boundary
+scheduling must emit exactly the tokens of the offline ``run()`` on the
+same requests — and after :meth:`ServeFrontend.warmup`, serve them with
+zero decode compiles.  The supporting contracts: per-request streaming
+order (tokens in generation order, then the Completion), drain blocking
+on inflight work, abortive shutdown resolving every handle, and the
+batched multi-prompt prefill being bitwise the single-prompt prefill
+per row (the invariant the identity claim stands on).
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import make_engine, Request, ServeFrontend, validate_stats
+
+MAX_SLOTS = 4
+MAX_SEQ = 64
+WINDOW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _make(setup, kind="slot", **kw):
+    cfg, params = setup
+    return make_engine(cfg, params, kind=kind, max_slots=MAX_SLOTS,
+                       max_seq=MAX_SEQ, window=WINDOW, **kw)
+
+
+def _workload(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+            for s in lens]
+
+
+def _offline(setup, prompts, budgets, kind="slot", **kw):
+    eng = _make(setup, kind=kind, **kw)
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=b))
+    return {c.rid: c.tokens for c in eng.run(max_steps=4096)}
+
+
+class TestLifecycle:
+    def test_out_of_order_arrivals_match_offline(self, setup):
+        """Mixed bucket lengths submitted online — intake coalescing
+        sorts and batches them, yet every stream equals the offline
+        serve of the same requests in the same rid order."""
+        cfg, _ = setup
+        lens = [5, 17, 9, 3, 23, 8]
+        budgets = [4, 2, 6, 3, 5, 4]
+        prompts = _workload(cfg, lens, seed=1)
+        want = _offline(setup, prompts, budgets)
+
+        fe = ServeFrontend(_make(setup))
+        handles = [fe.submit(p, b) for p, b in zip(prompts, budgets)]
+        done = fe.drain(timeout=120)
+        fe.shutdown()
+        assert {c.rid: c.tokens for c in done} == want
+        # Handles stream the same tokens their completions report.
+        for h, c in zip(handles, sorted(done, key=lambda c: c.rid)):
+            assert h.rid == c.rid
+            assert tuple(h.tokens) == c.tokens
+            assert h.done and h.result(timeout=1) == c
+            assert c.finish_reason == "length"
+        validate_stats(fe.stats)
+
+    def test_paged_engine_served_identically(self, setup):
+        cfg, _ = setup
+        prompts = _workload(cfg, [7, 8, 9, 16, 12], seed=3)
+        budgets = [3, 5, 2, 4, 6]
+        want = _offline(setup, prompts, budgets, kind="paged",
+                        page_size=8)
+        with ServeFrontend(_make(setup, kind="paged", page_size=8)) as fe:
+            for p, b in zip(prompts, budgets):
+                fe.submit(p, b)
+            done = fe.drain(timeout=120)
+        assert {c.rid: c.tokens for c in done} == want
+
+    def test_callback_ordering_per_request(self, setup):
+        """on_token callbacks fire once per token in generation order,
+        all before the completion resolves; a raising callback is
+        quarantined on the handle without disturbing the serve."""
+        cfg, _ = setup
+        prompts = _workload(cfg, [6, 6, 11], seed=5)
+        streams = {i: [] for i in range(3)}
+        order_ok = {}
+
+        def cb(rid):
+            def _cb(tok):
+                if rid == 2:
+                    raise RuntimeError("user callback exploded")
+                streams[rid].append(tok)
+                order_ok[rid] = not handles[rid].done
+            return _cb
+
+        fe = ServeFrontend(_make(setup))
+        handles = [fe.submit(p, 5, on_token=cb(i))
+                   for i, p in enumerate(prompts)]
+        done = {c.rid: c for c in fe.drain(timeout=120)}
+        fe.shutdown()
+        for rid in (0, 1):
+            assert tuple(streams[rid]) == done[rid].tokens
+            assert order_ok[rid]            # tokens preceded completion
+            assert handles[rid].callback_error is None
+        # rid 2: first delivery raised; stream still completes intact.
+        assert isinstance(handles[2].callback_error, RuntimeError)
+        assert len(done[2].tokens) == 5
+
+    def test_drain_blocks_on_inflight(self, setup):
+        cfg, _ = setup
+        prompts = _workload(cfg, [8, 8, 8, 8, 8, 8], seed=7)
+        fe = ServeFrontend(_make(setup))
+        for p in prompts:
+            fe.submit(p, 12)
+        done = fe.drain(timeout=120)        # called with work inflight
+        assert len(done) == len(prompts)
+        assert all(c.n_tokens == 12 for c in done)
+        m = fe.metrics()
+        assert m["completed"] == m["submitted"] == len(prompts)
+        assert m["inflight"] == 0
+        assert len(m["ttft"]) == len(prompts)
+        assert all(t >= 0 for t in m["ttft"] + m["tpot"])
+        fe.shutdown()
+
+    def test_abortive_shutdown_resolves_handles(self, setup):
+        cfg, _ = setup
+        prompts = _workload(cfg, [8] * 6, seed=9)
+        fe = ServeFrontend(_make(setup))
+        handles = [fe.submit(p, 40) for p in prompts]
+        fe.shutdown(drain=False)
+        for h in handles:
+            c = h.result(timeout=30)
+            assert c.finish_reason in ("aborted", "length")
+        assert any(h.result(timeout=0).finish_reason == "aborted"
+                   for h in handles)
+        with pytest.raises(RuntimeError):
+            fe.submit(prompts[0], 1)
+
+
+class TestWarmServing:
+    def test_warmup_then_serve_zero_compiles(self, setup):
+        """After AOT warmup the whole online path — coalesced batched
+        prefills included — runs without a single decode compile."""
+        cfg, _ = setup
+        fe = ServeFrontend(_make(setup))
+        fe.warmup(max_prompt_len=24)
+        prompts = _workload(cfg, [5, 17, 9, 3, 23, 8, 16, 12], seed=11)
+        for p in prompts:
+            fe.submit(p, 6)
+        done = fe.drain(timeout=120)
+        stats = fe.stats
+        fe.shutdown()
+        assert len(done) == len(prompts)
+        assert stats["decode_compiles"] == 0
+        # Bursty arrivals really coalesced: some admission cycle batched
+        # several same-bucket prompts into one prefill call.
+        assert stats["engine"]["prefill_batched_reqs"] > 0
+        assert fe.coalesced_prefills > 0
+
+    def test_poisson_smoke_token_identical(self, setup):
+        """Seeded Poisson arrivals (the serve_bench generator shape):
+        whatever interleaving the arrival process produces, the streams
+        equal the offline serve."""
+        cfg, _ = setup
+        rng = np.random.default_rng(13)
+        lens = [int(x) for x in rng.integers(3, 24, size=8)]
+        budgets = [int(b) for b in rng.integers(2, 7, size=8)]
+        gaps = rng.exponential(scale=0.004, size=8)
+        prompts = _workload(cfg, lens, seed=13)
+        want = _offline(setup, prompts, budgets)
+
+        fe = ServeFrontend(_make(setup))
+        fe.warmup(max_prompt_len=24)
+        stop = threading.Event()
+        for p, b, g in zip(prompts, budgets, gaps):
+            stop.wait(g)                   # Poisson inter-arrival gap
+            fe.submit(p, b)
+        done = fe.drain(timeout=120)
+        stats = fe.stats
+        fe.shutdown()
+        assert {c.rid: c.tokens for c in done} == want
+        assert stats["decode_compiles"] == 0
+
+
+class TestBatchedPrefillIdentity:
+    def test_batched_rows_bitwise_equal_single(self, setup):
+        """The coalesced multi-prompt prefill is bitwise the
+        single-prompt prefill per row — logits-derived first token and
+        every parked cache leaf — so coalescing can never perturb a
+        stream."""
+        cfg, _ = setup
+        prompts = _workload(cfg, [5, 7, 3], seed=15)
+        reqs_b = [Request(rid=i, prompt=p, max_new_tokens=4)
+                  for i, p in enumerate(prompts)]
+        reqs_s = [Request(rid=i, prompt=p.copy(), max_new_tokens=4)
+                  for i, p in enumerate(prompts)]
+
+        batched = _make(setup)
+        batched.prefill_batch(reqs_b)      # one (rung=4, bucket=8) call
+        assert batched.stats["engine"]["prefill_batches"] == 1
+        assert batched.stats["engine"]["prefill_batched_reqs"] == 3
+
+        single = _make(setup)
+        for r in reqs_s:
+            single._backfill_one(r)
+
+        assert len(batched._backfilled) == len(single._backfilled) == 3
+        for (rb, cb, pb), (rs, cs, ps) in zip(batched._backfilled,
+                                              single._backfilled):
+            assert rb.generated == rs.generated   # argmax of row logits
+            assert pb == ps
+            leaves_b = jax.tree.leaves(cb)
+            leaves_s = jax.tree.leaves(cs)
+            assert len(leaves_b) == len(leaves_s)
+            for lb, ls in zip(leaves_b, leaves_s):
+                np.testing.assert_array_equal(np.asarray(lb),
+                                              np.asarray(ls))

@@ -29,8 +29,7 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import init_params
-from repro.serve import (PagedKVCache, PagedServeEngine, Request,
-                         SlotServeEngine)
+from repro.serve import make_engine, PagedKVCache, Request
 
 # Small pool geometry: collisions and exhaustion happen often.
 SLOTS, PAGES, PSZ, PMAX = 4, 10, 4, 6
@@ -362,7 +361,7 @@ def _run(engine, prompts, budgets, max_steps=2000):
     for i, (p, b) in enumerate(zip(prompts, budgets)):
         engine.submit(Request(rid=i, prompt=p, max_new_tokens=b))
     done = engine.run(max_steps=max_steps)
-    return {r.rid: tuple(r.generated) for r in done}
+    return {c.rid: c.tokens for c in done}
 
 
 class TestPagedCompileStability:
@@ -374,12 +373,12 @@ class TestPagedCompileStability:
         cfg, params = setup
         prompts = _prompts([6, 9, 5, 7, 11, 6], cfg.vocab_size)
         budgets = [14, 9, 2, 2, 2, 2]   # rid 0 crosses pages 8 and 16
-        eng = PagedServeEngine(cfg, params, max_batch=4, max_seq=64,
-                               window=2, page_size=8)
+        eng = make_engine(cfg, params, kind="paged", max_slots=4,
+                          max_seq=64, window=2, page_size=8)
         tokens = _run(eng, prompts, budgets)
         assert len(tokens) == 6
-        assert eng.stats["page_grows"] > 0   # boundary crossings happened
-        rungs = eng.stats["rungs"]
+        assert eng.stats["engine"]["page_grows"] > 0   # boundary crossings happened
+        rungs = eng.stats["engine"]["rungs"]
         assert len(set(rungs)) >= 3, rungs
         compiles = eng.stats["decode_compiles"]
         if compiles is None:
@@ -399,8 +398,8 @@ class TestPagedCompileStability:
         import repro.serve.slot_engine as se
         monkeypatch.setattr(se, "jit_cache_entries", lambda fn: None)
         cfg, params = setup
-        eng = PagedServeEngine(cfg, params, max_batch=2, max_seq=64,
-                               window=2, page_size=8)
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=64, window=2, page_size=8)
         _run(eng, _prompts([5, 9], cfg.vocab_size), [3, 3])
         assert eng.stats["decode_compiles"] == eng._window_traces
         assert eng.stats["decode_compiles"] >= 1
@@ -410,13 +409,13 @@ class TestPagedCompileStability:
         compilation per ceil(len/page) value, not per length."""
         from repro.serve.slot_engine import jit_cache_entries
         cfg, params = setup
-        eng = PagedServeEngine(cfg, params, max_batch=2, max_seq=64,
-                               window=2, page_size=8)
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=64, window=2, page_size=8)
         prompts = _prompts([5, 6, 7, 8, 9, 12], cfg.vocab_size)
         _run(eng, prompts, [3] * 6)
         # lens 5-8 share the 1-page bucket; 9 and 12 the 2-page bucket.
-        assert eng.stats["prefill_bucket_misses"] == 2
-        assert eng.stats["prefill_bucket_hits"] == 4
+        assert eng.stats["engine"]["prefill_bucket_misses"] == 2
+        assert eng.stats["engine"]["prefill_bucket_hits"] == 4
         assert jit_cache_entries(eng.prefill_fn) in (2, None)
 
 
@@ -429,18 +428,18 @@ class TestMemoryFootprint:
         lens = [40, 6, 9, 5, 7, 12]
         budgets = [8, 4, 5, 3, 6, 4]
         prompts = _prompts(lens, cfg.vocab_size, seed=3)
-        slot = SlotServeEngine(cfg, params, max_batch=4, max_seq=64,
-                               window=4)
+        slot = make_engine(cfg, params, kind="slot", max_slots=4,
+                           max_seq=64, window=4)
         want = _run(slot, prompts, budgets)
         # 12 pages of 8 tokens; the dense equivalent is 4 slots x 8
         # pages = 32.  Two full-length requests would already need 16.
-        eng = PagedServeEngine(cfg, params, max_batch=4, max_seq=64,
-                               window=4, page_size=8, num_pages=12)
+        eng = make_engine(cfg, params, kind="paged", max_slots=4,
+                          max_seq=64, window=4, page_size=8, num_pages=12)
         got = _run(eng, prompts, budgets)
         assert got == want
         # Genuinely concurrent (dense storage at this byte budget could
         # hold at most one max_seq slot)...
-        assert max(eng.stats["rungs"]) >= 2
+        assert max(eng.stats["engine"]["rungs"]) >= 2
         assert eng.cache.num_pages < 2 * eng.cache.max_pages_per_slot
         # ...and genuinely smaller than the dense engine's residency.
         dense = slot.cache.resident_bytes()
@@ -451,22 +450,23 @@ class TestMemoryFootprint:
         _, params = setup
         gemma = smoke_config("gemma3-1b")   # sliding-window layers
         with pytest.raises(ValueError):
-            PagedServeEngine(gemma, None, max_batch=2, max_seq=32)
+            make_engine(gemma, None, kind="paged", max_slots=2, max_seq=32)
         cfg, params = setup
         with pytest.raises(ValueError):    # exact-length caches can't page
-            PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
-                             prefill_bucketing=False)
+            make_engine(cfg, params, kind="paged", max_slots=2, max_seq=32,
+                        buckets="off")
         from repro.models.attention import set_kv_cache_quant
         cfg, params = setup
         set_kv_cache_quant(True)
         try:
             with pytest.raises(NotImplementedError):
-                PagedServeEngine(cfg, params, max_batch=2, max_seq=32)
+                make_engine(cfg, params, kind="paged", max_slots=2,
+                            max_seq=32)
         finally:
             set_kv_cache_quant(False)
         with pytest.raises(ValueError):    # pool quant is int8-or-f32
-            PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
-                             kv_quant="fp8")
+            make_engine(cfg, params, kind="paged", max_slots=2, max_seq=32,
+                        kv_quant="fp8")
 
 
 class TestPrefixSharing:
@@ -484,8 +484,8 @@ class TestPrefixSharing:
         budgets = [5, 4, 6, 3]
 
         def build(**kw):
-            return PagedServeEngine(cfg, params, max_batch=4, max_seq=64,
-                                    window=4, page_size=8, **kw)
+            return make_engine(cfg, params, kind="paged", max_slots=4,
+                               max_seq=64, window=4, page_size=8, **kw)
 
         base = build(prefix_sharing=False)
         want = _run(base, prompts, budgets)
@@ -496,13 +496,13 @@ class TestPrefixSharing:
         # (admission order can vary; every follower shares >= the
         # preamble) and the fresh-page count shrinks by exactly the
         # shared count.
-        assert eng.stats["pages_shared"] >= 6
-        assert (eng.stats["page_admits"] + eng.stats["pages_shared"]
-                == base.stats["page_admits"])
-        assert eng.stats["page_cows"] == 0   # writes start past prompts
+        assert eng.stats["engine"]["pages_shared"] >= 6
+        assert (eng.stats["engine"]["page_admits"] + eng.stats["engine"]["pages_shared"]
+                == base.stats["engine"]["page_admits"])
+        assert eng.stats["engine"]["page_cows"] == 0   # writes start past prompts
         # Peak residency: sharing strictly fewer pages mapped at once.
-        assert (eng.stats["pages_mapped_peak"]
-                < base.stats["pages_mapped_peak"])
+        assert (eng.stats["engine"]["pages_mapped_peak"]
+                < base.stats["engine"]["pages_mapped_peak"])
         # Everything drains: pool full, registry empty, nothing orphaned.
         assert eng.cache.n_free_pages == eng.cache.num_pages
         assert eng.cache.orphaned_pages == 0
@@ -521,14 +521,89 @@ class TestPrefixSharing:
         budgets = [6, 6]
         # Worst case per request: ceil((24 + 3) / 8) = 4 pages; pool of
         # 6 fits both only because the 3 full prompt pages are shared.
-        eng = PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
-                               window=4, page_size=8, num_pages=6)
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=32, window=4, page_size=8, num_pages=6)
         got = _run(eng, prompts, budgets)
-        noshare = PagedServeEngine(cfg, params, max_batch=2, max_seq=32,
-                                   window=4, page_size=8, num_pages=6,
-                                   prefix_sharing=False)
+        noshare = make_engine(cfg, params, kind="paged", max_slots=2,
+                              max_seq=32, window=4, page_size=8,
+                              num_pages=6, prefix_sharing=False)
         want = _run(noshare, prompts, budgets)
         assert got == want
-        assert max(eng.stats["rungs"]) == 2       # truly concurrent
-        assert max(noshare.stats["rungs"]) == 1   # serialized without
-        assert eng.stats["pages_shared"] == 3
+        assert max(eng.stats["engine"]["rungs"]) == 2       # truly concurrent
+        assert max(noshare.stats["engine"]["rungs"]) == 1   # serialized without
+        assert eng.stats["engine"]["pages_shared"] == 3
+
+
+class TestResetLifecycle:
+    """reset() must return the engine to a like-new state: pool, prefix
+    registry, and orphan accounting all purged."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = smoke_config("yi-6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_serve_reset_serve_under_pool_pressure(self, setup):
+        """Serve a sharing-heavy workload that nearly fills the pool,
+        reset, then serve it again: the second pass must emit identical
+        tokens and identical page accounting, with no leaked pages or
+        stale registry entries carried across the reset."""
+        cfg, params = setup
+        rng = np.random.default_rng(23)
+        preamble = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        prompts = [np.concatenate(
+            [preamble, rng.integers(0, cfg.vocab_size, size=ext)
+             .astype(np.int32)]) for ext in (2, 5, 0)]
+        budgets = [5, 4, 6]
+        # Tight pool: worst case per request is 4 pages; 8 pages only
+        # fit three concurrent requests because the preamble is shared.
+        eng = make_engine(cfg, params, kind="paged", max_slots=3,
+                          max_seq=32, window=4, page_size=8, num_pages=8)
+        first = _run(eng, prompts, budgets)
+        snap = dict(eng.stats["engine"])
+        assert snap["pages_shared"] > 0          # pressure test is real
+
+        eng.reset()
+        assert eng.cache.n_free_pages == eng.cache.num_pages
+        assert eng.cache.orphaned_pages == 0
+        assert not eng._prefix_registry and not eng._page_key
+        assert eng.stats["engine"]["page_admits"] == 0
+
+        second = _run(eng, prompts, budgets)
+        assert second == first
+        for key in ("page_admits", "pages_shared", "page_grows",
+                    "pages_mapped_peak"):
+            assert eng.stats["engine"][key] == snap[key], key
+        assert eng.cache.n_free_pages == eng.cache.num_pages
+
+    def test_registry_desync_drops_stale_entries(self, setup):
+        """If storage drains behind the engine's back, the prefix
+        registry points at recycled pages.  _probe_shared must detect
+        the desync (refcount/key mismatch), drop the stale entries, and
+        serve correct tokens instead of mapping garbage."""
+        cfg, params = setup
+        rng = np.random.default_rng(31)
+        prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=32, window=4, page_size=8, num_pages=8)
+        want = _run(eng, [prompt], [4])
+        # Forge the post-desync state: registry entries for this exact
+        # prompt pointing at pages that already drained (refcount 0) —
+        # what a storage-level reset without engine.reset() leaves
+        # behind.  A naive probe would map these free pages as shared
+        # prefix and alias garbage into the request.
+        toks = np.asarray(prompt, np.int32)
+        for j in range(len(toks) // eng.page_size):
+            key = toks[:(j + 1) * eng.page_size].tobytes()
+            eng._prefix_registry[key] = j
+            eng._page_key[j] = key
+        assert eng._prefix_registry               # the hazard is armed
+        got = _run(eng, [prompt.copy()], [4])
+        assert got == want
+        assert eng.stats["engine"]["pages_shared"] == 0   # no bogus sharing
+        # Stale entries were evicted; any survivors point at live pages
+        # whose reverse mapping agrees.
+        for key, pg in eng._prefix_registry.items():
+            assert eng.cache.page_refcount(pg) >= 1
+            assert eng._page_key.get(pg) == key

@@ -49,9 +49,9 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import init_params
-from repro.serve import (PagedServeEngine, Request, ServeEngine,
-                         SlotServeEngine)
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.serve import (make_engine, PagedServeEngine, Request,
+                         SlotServeEngine, validate_stats)
+from repro.serve.serve_step import make_prefill_step
 
 MAX_BATCH = 4
 MAX_SEQ = 64
@@ -81,26 +81,27 @@ def engines(setup):
     """One long-lived engine per (kind, coexec) point; reset per example."""
     cfg, params = setup
     legacy_prefill = jax.jit(make_prefill_step(cfg, cache_len=MAX_SEQ))
-    legacy_decode = jax.jit(make_decode_step(cfg))
 
     def legacy(coexec=None):
-        return ServeEngine(cfg, params, prefill_fn=legacy_prefill,
-                           decode_fn=legacy_decode, cache_init_fn=None,
-                           max_batch=MAX_BATCH, max_seq=MAX_SEQ,
-                           coexec_backend=coexec)
+        # One jitted prefill shared across the coexec axis (the factory
+        # would build a fresh one per engine, doubling compile time).
+        return make_engine(cfg, params, kind="sequential",
+                           max_slots=MAX_BATCH, max_seq=MAX_SEQ,
+                           coexec_backend=coexec,
+                           prefill_fn=legacy_prefill)
 
     def slot(coexec=None):
-        return SlotServeEngine(cfg, params, max_batch=MAX_BATCH,
-                               max_seq=MAX_SEQ, window=WINDOW,
-                               coexec_backend=coexec)
+        return make_engine(cfg, params, kind="slot", max_slots=MAX_BATCH,
+                           max_seq=MAX_SEQ, window=WINDOW,
+                           coexec_backend=coexec)
 
     def paged(coexec=None, num_pages=None):
-        return PagedServeEngine(cfg, params, max_batch=MAX_BATCH,
-                                max_seq=MAX_SEQ, window=WINDOW,
-                                page_size=PSZ, num_pages=num_pages,
-                                coexec_backend=coexec,
-                                kv_quant=None if KV_POOL == "f32"
-                                else KV_POOL)
+        return make_engine(cfg, params, kind="paged", max_slots=MAX_BATCH,
+                           max_seq=MAX_SEQ, window=WINDOW,
+                           page_size=PSZ, num_pages=num_pages,
+                           coexec_backend=coexec,
+                           kv_quant=None if KV_POOL == "f32"
+                           else KV_POOL)
 
     return {"legacy": legacy(), "legacy_co": legacy("xla"),
             "slot": slot(), "slot_co": slot("xla"),
@@ -119,14 +120,18 @@ def _serve(eng, workload, prompts):
     for rid, ((_, budget), prompt) in enumerate(zip(workload, prompts)):
         eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=budget))
     done = eng.run(max_steps=4096)
-    return {r.rid: tuple(r.generated) for r in done}
+    return {c.rid: c.tokens for c in done}
 
 
 def _check_serve_stats(eng, tokens, workload):
     assert len(tokens) == len(workload)
+    # Schema equality across every engine: exactly the shared top-level
+    # keys, extras namespaced under stats["engine"].
+    validate_stats(eng.stats)
+    ext = eng.stats["engine"]
     if isinstance(eng, SlotServeEngine):   # includes PagedServeEngine
-        assert eng.stats["slot_admits"] == len(workload)
-        assert eng.stats["slot_releases"] == len(workload)
+        assert ext["slot_admits"] == len(workload)
+        assert ext["slot_releases"] == len(workload)
         assert eng.cache.n_free == eng.max_batch
     if isinstance(eng, PagedServeEngine):
         # The pool drains back to empty: no leaked pages, reservations,
@@ -135,11 +140,11 @@ def _check_serve_stats(eng, tokens, workload):
         assert eng.cache.reserved_total == 0
         assert eng.cache.orphaned_pages == 0
         assert not eng._prefix_registry and not eng._page_key
-        assert eng.stats["pages_mapped_peak"] <= eng.cache.num_pages
+        assert ext["pages_mapped_peak"] <= eng.cache.num_pages
         # Every request maps >= 1 page, fresh or shared by reference.
-        assert (eng.stats["page_admits"]
-                + eng.stats["pages_shared"]) >= len(workload)
-        assert eng.stats["page_cows"] == 0   # serve flow never CoWs
+        assert (ext["page_admits"]
+                + ext["pages_shared"]) >= len(workload)
+        assert ext["page_cows"] == 0   # serve flow never CoWs
 
 
 # Pool quantization is token-visible by design, so under the int8 axis
@@ -243,14 +248,14 @@ class TestSharedPrefix:
         total = sum(-(-len(p) // PSZ) for p in prompts)
         for name in ("paged", "paged_small"):
             eng = engines[name]
-            assert (eng.stats["page_admits"]
-                    + eng.stats["pages_shared"]) == total, name
+            assert (eng.stats["engine"]["page_admits"]
+                    + eng.stats["engine"]["pages_shared"]) == total, name
         # Physical dedup (big pool, where the first admission pass
         # co-admits max_batch requests): every co-admitted follower
         # mapped the preamble by reference.  The small pool serializes
         # under pressure, and a follower admitted after every holder
         # released legitimately maps fresh pages — no lower bound there.
-        assert (engines["paged"].stats["pages_shared"]
+        assert (engines["paged"].stats["engine"]["pages_shared"]
                 >= (min(len(prompts), MAX_BATCH) - 1) * pre_pages)
 
 

@@ -20,8 +20,7 @@ import pytest
 
 from repro.configs import get_config, smoke_config
 from repro.models import init_params
-from repro.serve import Request, ServeEngine, SlotServeEngine
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.serve import make_engine, Request
 
 
 @pytest.fixture(scope="module")
@@ -40,7 +39,7 @@ def _run(engine, prompts, budgets, max_steps=800):
     for i, (p, b) in enumerate(zip(prompts, budgets)):
         engine.submit(Request(rid=i, prompt=p, max_new_tokens=b))
     done = engine.run(max_steps=max_steps)
-    return {r.rid: tuple(r.generated) for r in done}
+    return {c.rid: c.tokens for c in done}
 
 
 class TestCompileStability:
@@ -52,11 +51,11 @@ class TestCompileStability:
         # Slots 0/1 hold the long-lived requests; the short tail cycles
         # through slots 2/3, so the serve drains rung 4 -> 2 -> 1.
         budgets = [14, 9, 2, 2, 2, 2]
-        eng = SlotServeEngine(cfg, params, max_batch=4, max_seq=64,
-                              window=2)
+        eng = make_engine(cfg, params, kind="slot", max_slots=4,
+                          max_seq=64, window=2)
         tokens = _run(eng, prompts, budgets)
         assert len(tokens) == 6
-        rungs = eng.stats["rungs"]
+        rungs = eng.stats["engine"]["rungs"]
         # The serve really exercised multiple ladder shapes...
         assert len(set(rungs)) >= 3, rungs
         # ...and compiled the window at most once per distinct rung.
@@ -73,13 +72,13 @@ class TestCompileStability:
         """Prompts sharing a power-of-two bucket reuse one prefill
         compilation; stats record the hit/miss split."""
         cfg, params = setup
-        eng = SlotServeEngine(cfg, params, max_batch=2, max_seq=64,
-                              window=2)
+        eng = make_engine(cfg, params, kind="slot", max_slots=2,
+                          max_seq=64, window=2)
         prompts = _prompts([5, 6, 7, 8], cfg.vocab_size)
         _run(eng, prompts, [3, 3, 3, 3])
         # All four prompts pad to the same 8-token bucket.
-        assert eng.stats["prefill_bucket_misses"] == 1
-        assert eng.stats["prefill_bucket_hits"] == 3
+        assert eng.stats["engine"]["prefill_bucket_misses"] == 1
+        assert eng.stats["engine"]["prefill_bucket_hits"] == 3
         from repro.serve.slot_engine import jit_cache_entries
         assert jit_cache_entries(eng.prefill_fn) in (1, None)
 
@@ -90,18 +89,18 @@ class TestSlotLifecycle:
         with exactly the tokens a fresh engine would produce."""
         cfg, params = setup
         pa, pb = _prompts([13, 6], cfg.vocab_size, seed=3)
-        eng = SlotServeEngine(cfg, params, max_batch=1, max_seq=64,
-                              window=2)
+        eng = make_engine(cfg, params, kind="slot", max_slots=1,
+                          max_seq=64, window=2)
         eng.submit(Request(rid=0, prompt=pa, max_new_tokens=6))
         eng.submit(Request(rid=1, prompt=pb, max_new_tokens=5))
-        tokens = {r.rid: tuple(r.generated) for r in eng.run(200)}
+        tokens = {c.rid: c.tokens for c in eng.run(200)}
         # One slot, two requests: it was reused.
-        assert eng.stats["slot_admits"] == 2
-        assert eng.stats["slot_releases"] == 2
-        fresh = SlotServeEngine(cfg, params, max_batch=1, max_seq=64,
-                                window=2)
+        assert eng.stats["engine"]["slot_admits"] == 2
+        assert eng.stats["engine"]["slot_releases"] == 2
+        fresh = make_engine(cfg, params, kind="slot", max_slots=1,
+                            max_seq=64, window=2)
         fresh.submit(Request(rid=1, prompt=pb, max_new_tokens=5))
-        alone = {r.rid: tuple(r.generated) for r in fresh.run(200)}
+        alone = {c.rid: c.tokens for c in fresh.run(200)}
         assert tokens[1] == alone[1]
 
     def test_free_list_prefers_lowest_slot(self):
@@ -123,17 +122,16 @@ class TestSlotLifecycle:
         lens = [6, 13, 21, 9]
         prompts = _prompts(lens, cfg.vocab_size, seed=5)
         budgets = [4, 3, 5, 4]
-        eng = SlotServeEngine(cfg, params, max_batch=4, max_seq=64,
-                              window=3)
+        eng = make_engine(cfg, params, kind="slot", max_slots=4,
+                          max_seq=64, window=3)
         batched = _run(eng, prompts, budgets)
         alone = {}
         for i in range(len(lens)):
-            single = SlotServeEngine(cfg, params, max_batch=1, max_seq=64,
-                                     window=3)
+            single = make_engine(cfg, params, kind="slot", max_slots=1,
+                                 max_seq=64, window=3)
             single.submit(Request(rid=i, prompt=prompts[i],
                                   max_new_tokens=budgets[i]))
-            alone.update({r.rid: tuple(r.generated)
-                          for r in single.run(200)})
+            alone.update({c.rid: c.tokens for c in single.run(200)})
         assert batched == alone
 
 
@@ -145,14 +143,11 @@ class TestEquivalenceWithLegacyEngine:
         cfg, params = setup
         prompts = _prompts([6] * 5, cfg.vocab_size, seed=1)
         budgets = [3, 1, 4, 2, 3]
-        legacy = ServeEngine(
-            cfg, params,
-            prefill_fn=jax.jit(make_prefill_step(cfg, cache_len=64)),
-            decode_fn=jax.jit(make_decode_step(cfg)), cache_init_fn=None,
-            max_batch=2, max_seq=64)
+        legacy = make_engine(cfg, params, kind="sequential", max_slots=2,
+                             max_seq=64)
         want = _run(legacy, prompts, budgets)
-        slot = SlotServeEngine(cfg, params, max_batch=2, max_seq=64,
-                               window=4)
+        slot = make_engine(cfg, params, kind="slot", max_slots=2,
+                           max_seq=64, window=4)
         got = _run(slot, prompts, budgets)
         assert got == want
         assert all(len(t) == max(b, 2)

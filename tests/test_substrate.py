@@ -126,14 +126,11 @@ class TestTrainer:
 
 class TestServeEngine:
     def test_engine_serves_queue(self):
-        from repro.serve import Request, ServeEngine
-        from repro.serve.serve_step import make_decode_step, make_prefill_step
+        from repro.serve import make_engine, Request
         cfg = smoke_config("yi-6b")
         params = init_params(cfg, jax.random.PRNGKey(0))
-        prefill = jax.jit(make_prefill_step(cfg, cache_len=64))
-        decode = jax.jit(make_decode_step(cfg))
-        eng = ServeEngine(cfg, params, prefill_fn=prefill, decode_fn=decode,
-                          cache_init_fn=None, max_batch=4, max_seq=64)
+        eng = make_engine(cfg, params, kind="sequential", max_slots=4,
+                          max_seq=64)
         rng = np.random.default_rng(0)
         for i in range(3):
             eng.submit(Request(rid=i, prompt=rng.integers(
@@ -141,7 +138,8 @@ class TestServeEngine:
                 max_new_tokens=4))
         done = eng.run(max_steps=64)
         assert len(done) == 3
-        assert all(len(r.generated) >= 4 for r in done)
+        assert all(c.n_tokens >= 4 for c in done)
+        assert all(c.finish_reason == "length" for c in done)
         assert len(eng.stats["ttft"]) == 3
 
     def test_sisa_batch_quantization(self):
