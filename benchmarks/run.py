@@ -34,14 +34,16 @@ def main() -> None:
     from benchmarks.multi_tenant_bench import bench_multi_tenant
     from benchmarks.serve_bench import (bench_serving,
                                         bench_serving_frontend,
-                                        bench_serving_paged)
+                                        bench_serving_paged,
+                                        bench_serving_sharded)
     from benchmarks.slab_ablation import bench_slab_ablation
 
     benches = [bench_table2_shapes, bench_table3_area_energy,
                bench_fig4_speedup, bench_fig5_edp, bench_fig6_redas,
                bench_fig7_casestudy, bench_kernels, bench_grouped_kernels,
                bench_slab_ablation, bench_multi_tenant, bench_serving,
-               bench_serving_paged, bench_serving_frontend]
+               bench_serving_paged, bench_serving_frontend,
+               bench_serving_sharded]
     if args.quick:
         # CI smoke: the analytic benches are already fast; skip the slow
         # interpret-mode kernel sweep and shrink the packing/grouped
@@ -52,7 +54,8 @@ def main() -> None:
                    functools.partial(bench_multi_tenant, quick=True),
                    functools.partial(bench_serving, quick=True),
                    functools.partial(bench_serving_paged, quick=True),
-                   functools.partial(bench_serving_frontend, quick=True)]
+                   functools.partial(bench_serving_frontend, quick=True),
+                   functools.partial(bench_serving_sharded, quick=True)]
 
     def _name(b) -> str:
         fn = b.func if isinstance(b, functools.partial) else b

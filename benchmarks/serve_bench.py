@@ -425,10 +425,134 @@ def bench_serving_frontend(quick: bool = False,
     ]
 
 
+_SHARDED_CODE = """
+import json
+import numpy as np, jax
+from jax.sharding import Mesh
+from benchmarks.serve_bench import _long_workload, _serve
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import make_engine
+
+QUICK = {quick}
+cfg = smoke_config("yi-6b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+max_batch = 4 if QUICK else 8
+max_seq = 128 if QUICK else 256
+window = 4 if QUICK else 8
+page_size = 16
+num_pages = max_batch * (max_seq // page_size) // 2
+reqs = _long_workload(QUICK)
+kw = dict(max_slots=max_batch, max_seq=max_seq, window=window,
+          page_size=page_size, num_pages=num_pages)
+
+
+def warm_serve(eng):
+    eng.warmup(max_prompt_len=max_seq)
+    _serve(eng, reqs)                    # first pass after AOT warmup
+    best = None
+    for _ in range(3):
+        eng.reset()
+        r = _serve(eng, reqs)
+        if best is None or r[0] < best[0]:
+            best = r
+    return best, eng.stats["decode_compiles"]
+
+
+def kv_bytes(eng, per_shard):
+    total = 0
+    for leaf in jax.tree.leaves(eng.cache.pools) + [eng.cache.table]:
+        shape = (leaf.sharding.shard_shape(leaf.shape) if per_shard
+                 else leaf.shape)
+        total += int(np.prod(shape)) * leaf.dtype.itemsize
+    return total
+
+
+ref = make_engine(cfg, params, kind="paged", **kw)
+(el_ref, tok_ref, ttft_ref, want), _ = warm_serve(ref)
+ref_bytes = kv_bytes(ref, per_shard=False)
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+sh = make_engine(cfg, params, kind="paged", mesh=mesh, **kw)
+(el, tok, ttft, got), warm_compiles = warm_serve(sh)
+assert got == want, "sharded paged serve diverged from single-device"
+shard_bytes = kv_bytes(sh, per_shard=True)
+
+print("SHARDED_JSON " + json.dumps(dict(
+    el_ref=el_ref, tok_ref=tok_ref, el=el, tok=tok, ttft=ttft,
+    ref_bytes=ref_bytes, shard_bytes=shard_bytes,
+    warm_compiles=warm_compiles)))
+"""
+
+
+def bench_serving_sharded(quick: bool = False) -> List[Row]:
+    """Mesh-sharded paged serving vs the single-device engine, on the
+    8-fake-device CPU mesh the CI mesh leg uses (the bench itself runs
+    in a subprocess so the parent's single-device jax backend, already
+    initialized by the other benches, is untouched):
+
+    * ``serve_sharded_paged_long`` — warm wall microseconds per token
+      for the sharded paged engine on a ``4x2 ("data", "model")`` mesh
+      serving the long-context shared-preamble workload, token streams
+      asserted identical to the single-device run;
+    * ``serve_sharded_kv_shard_bytes`` — per-shard resident KV bytes
+      (head-sharded pool slice + replicated page table) over the
+      single-device total x 1000: tensor parallelism must actually
+      split the pool residency (hard-bounded < 0.8x — TP=2 halves the
+      pool, the replicated table and scale planes cost the rest);
+    * ``serve_sharded_warm_compiles`` — decode compiles after
+      ``warmup()`` x 10_000, hard-gated to 0: the mesh must not cost
+      the fast path its zero-steady-state-compile invariant.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CODE.format(quick=quick)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    marker = [ln for ln in out.stdout.splitlines()
+              if ln.startswith("SHARDED_JSON ")]
+    assert marker, out.stdout + out.stderr[-2000:]
+    r = json.loads(marker[-1][len("SHARDED_JSON "):])
+
+    tps_ref = r["tok_ref"] / r["el_ref"]
+    tps = r["tok"] / r["el"]
+    ratio_bytes = r["shard_bytes"] / r["ref_bytes"]
+    write_csv("serve_sharded",
+              ["engine", "tokens", "elapsed_s", "tok_per_s",
+               "resident_kv_bytes", "warm_decode_compiles"],
+              [("paged_1dev", r["tok_ref"], f"{r['el_ref']:.3f}",
+                f"{tps_ref:.1f}", r["ref_bytes"], ""),
+               ("paged_4x2", r["tok"], f"{r['el']:.3f}", f"{tps:.1f}",
+                r["shard_bytes"], r["warm_compiles"])])
+    return [
+        ("serve_sharded_paged_long", r["el"] * 1e6 / r["tok"],
+         f"{tps:.1f} tok/s sharded paged on the 4x2 mesh "
+         f"({tps / tps_ref:.2f}x single-device {tps_ref:.1f} tok/s on "
+         f"8 fake CPU devices; tokens identical)"),
+        ("serve_sharded_kv_shard_bytes", ratio_bytes * 1000.0,
+         f"per-shard resident KV {ratio_bytes:.2f}x the single-device "
+         f"total ({r['shard_bytes']} vs {r['ref_bytes']} bytes; hard "
+         f"bound < 0.8x)"),
+        ("serve_sharded_warm_compiles", r["warm_compiles"] * 10_000.0,
+         f"{r['warm_compiles']} decode compiles after AOT warmup on "
+         f"the mesh (hard bound: 0 — GSPMD resharding must not leak "
+         f"into the jit compile keys)"),
+    ]
+
+
 if __name__ == "__main__":
     for row in bench_serving(quick=True):
         print(row)
     for row in bench_serving_paged(quick=True):
         print(row)
     for row in bench_serving_frontend(quick=True):
+        print(row)
+    for row in bench_serving_sharded(quick=True):
         print(row)

@@ -56,6 +56,14 @@ HARD_MAX_US = {
     # steady-state online serving must never compile (ISSUE 7 acceptance
     # bound — zero, not merely bounded).
     "serve_frontend_warm_compiles": 0.0,
+    # per-shard over single-device resident-KV-byte ratio x 1000 on the
+    # 4x2 mesh: TP=2 must split the head-sharded pool (~0.5x) with the
+    # replicated page table costing the remainder.
+    "serve_sharded_kv_shard_bytes": 800.0,
+    # decode compiles after warmup on the sharded paged engine x 10_000:
+    # the mesh must not cost the fast path its zero-steady-state-compile
+    # invariant (ISSUE 8 acceptance bound — zero).
+    "serve_sharded_warm_compiles": 0.0,
 }
 
 

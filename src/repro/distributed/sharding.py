@@ -56,10 +56,25 @@ def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
     return None
 
 
+def _canon(entries) -> P:
+    """Build a PartitionSpec with trailing ``None``s stripped.
+
+    ``with_sharding_constraint`` canonicalizes its output sharding to
+    the short form (``P(None, 'model')`` not ``P(None, 'model', None)``),
+    and jit compile caches key on the exact sharding object — so every
+    spec we hand to ``device_put`` must use the same spelling or a
+    freshly-allocated buffer triggers a spurious recompile against the
+    constrained form.
+    """
+    entries = list(entries)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
 def _spec(mesh: Mesh, shape: Sequence[int], *axes) -> P:
     """Divisibility-guarded PartitionSpec builder."""
-    fitted = [_fit(mesh, d, a) for d, a in zip(shape, axes)]
-    return P(*fitted)
+    return _canon(_fit(mesh, d, a) for d, a in zip(shape, axes))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,15 +203,100 @@ def to_named(tree_specs: PyTree, mesh: Mesh) -> PyTree:
 
 
 # --------------------------------------------------------------------------
+# Serving-cache specs (slot buffers, paged page pools, recurrent states)
+# --------------------------------------------------------------------------
+_POOL_LEAVES = ("pk", "pv", "pk_s", "pv_s")
+
+
+def cache_specs(cache_shapes: PyTree, cfg, mesh: Mesh, *,
+                batch_axes=None) -> PyTree:
+    """PartitionSpec pytree for serving KV storage on a TP/DP mesh.
+
+    Covers every cache layout the engines allocate, dispatching on the
+    leaf *name* (the paged pool and the dense slot cache are both 5-dim,
+    so shape alone cannot distinguish them):
+
+    * ``pk``/``pv`` (+ ``pk_s``/``pv_s`` int8 scale planes) — paged page
+      pool ``(L, pages+1, psz, Hkv, hd|1)``: the page axis is **never**
+      sharded (the page table indexes physical pages globally, so every
+      shard must see every page row); K/V heads go tensor-parallel over
+      ``model`` when divisible, else the page interior seq-shards.
+    * ``k``/``v`` (+ scales) — dense slot cache ``(L, B, cap, Hkv,
+      hd|1)``: batch over ``batch_axes`` and heads over ``model`` when
+      divisible, else the sequence axis shards (long-context fallback).
+    * 3-dim ``(L, B, d)`` recurrent states: feature dim over ``model``.
+    * anything else: replicated.
+
+    Every rule is divisibility-guarded through :func:`_fit` — an odd
+    mesh degrades to replication, it never raises.  The page table and
+    position vectors are deliberately *not* covered here: they are
+    replicated (``P()``) by construction.
+
+    ``batch_axes=None`` means the mesh's data axes; serving engines pass
+    ``()`` because their leading cache dim is the logical slot index
+    (fixed ``max_slots``), not a data-parallel batch.
+    """
+    ax = mesh_axes_for(mesh)
+    M = ax.model if ax.model in mesh.axis_names else None
+    if batch_axes is None:
+        B = tuple(a for a in ax.batch if a in mesh.axis_names) or None
+    else:
+        B = tuple(batch_axes) or None
+    ms = _axes_size(mesh, M)
+    head_ok = (ms > 1 and cfg.n_heads % ms == 0
+               and cfg.n_kv_heads % ms == 0)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat:
+        name = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if name in _POOL_LEAVES and nd == 5:
+            if head_ok:
+                spec = _canon((None, None, None, _fit(mesh, shape[3], M),
+                               None))
+            else:
+                spec = _canon((None, None, _fit(mesh, shape[2], M), None,
+                               None))
+        elif nd == 5:
+            b = _fit(mesh, shape[1], B)
+            if head_ok:
+                spec = _canon((None, b, None, _fit(mesh, shape[3], M),
+                               None))
+            else:
+                spec = _canon((None, b, _fit(mesh, shape[2], M), None,
+                               None))
+        elif nd == 4:
+            spec = _canon((None, _fit(mesh, shape[1], B), None, None))
+        elif nd == 3:
+            spec = _canon((None, _fit(mesh, shape[1], B),
+                           _fit(mesh, shape[2], M)))
+        else:
+            spec = P()
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------
 # Activation sharding
 # --------------------------------------------------------------------------
 class MeshSharder(Sharder):
     """Activation-constraint injector used by the model zoo."""
 
-    def __init__(self, mesh: Mesh, cfg):
+    def __init__(self, mesh: Mesh, cfg, batch_axes=None):
         self.mesh = mesh
         self.cfg = cfg
         self.ax = mesh_axes_for(mesh)
+        # Serving constrains per-slot activations whose leading dim is
+        # the logical slot index, not a data-parallel batch: engines
+        # pass batch_axes=() so slot counts never alias the data axis.
+        self._batch = (self.ax.batch if batch_axes is None
+                       else tuple(batch_axes))
         # Sequence parallelism conflicts with *sequentially*-scanned
         # recurrences: WKV's chunk loop is a sequential lax.scan whose
         # leading axis must be unsharded, so XLA all-gathers the full
@@ -218,7 +318,7 @@ class MeshSharder(Sharder):
 
     def constrain(self, x, role: str):
         ax = self.ax
-        B, M = ax.batch, ax.model
+        B, M = self._batch, ax.model
         head_ok = (self.cfg.n_heads % self.mesh.shape[M] == 0
                    and self.cfg.n_kv_heads % self.mesh.shape[M] == 0)
         if role == "hidden":            # (B, S, d): SP over seq

@@ -22,7 +22,9 @@ from repro.kernels.grouped_gemm import (flat_block_rows, flat_group_offsets,
                                         ragged_grouped_gemm,
                                         segment_grouped_gemm)
 from repro.kernels.ops import set_default_backend, sisa_einsum_2d, sisa_matmul
-from repro.kernels.paged_attn import (paged_attention, quantize_page_pool,
+from repro.kernels.paged_attn import (paged_attention,
+                                      paged_attention_sharded,
+                                      quantize_page_pool,
                                       resolve_paged_attn_backend,
                                       set_paged_attn_backend)
 from repro.kernels.runtime import resolve_interpret, set_force_interpret
@@ -35,6 +37,7 @@ __all__ = ["BlockConfig", "choose_block_config", "sisa_gemm",
            "flat_block_rows", "flat_group_offsets",
            "CoexecPlan", "CoexecTenant", "build_coexec_plan",
            "coexec_matmul", "sequential_matmul",
-           "paged_attention", "quantize_page_pool",
+           "paged_attention", "paged_attention_sharded",
+           "quantize_page_pool",
            "set_paged_attn_backend", "resolve_paged_attn_backend",
            "set_force_interpret", "resolve_interpret"]

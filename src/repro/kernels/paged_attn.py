@@ -268,6 +268,60 @@ def paged_attention(q, pk, pv, table, pos, *,
     raise ValueError(f"paged_attention cannot dispatch impl={impl!r}")
 
 
+def paged_attention_sharded(q, pk, pv, table, pos, *, mesh,
+                            model_axis: str = "model",
+                            pk_scale=None, pv_scale=None,
+                            impl: Optional[str] = None):
+    """Tensor-parallel :func:`paged_attention` under ``shard_map``.
+
+    Heads are embarrassingly parallel in the online-softmax recurrence,
+    so each ``model``-axis shard runs the *unmodified* kernel (fused
+    Pallas or its XLA twin — whichever ``impl`` resolves to) over its
+    own slice of the query heads and the page pool's KV heads:
+
+    * ``q``: ``P(None, model, None)`` — query heads split;
+    * ``pk``/``pv`` (+ scale planes): ``P(None, None, model, None)`` —
+      KV heads split, the *page* axis replicated (every shard sees every
+      physical page; the table indexes pages globally);
+    * ``table``/``pos``: replicated.
+
+    GQA survives sharding because ``n_heads % ms == 0`` and
+    ``n_kv_heads % ms == 0`` keep the per-shard group ratio intact.
+    Falls back to the single-device call when the mesh's ``model`` axis
+    is absent, size 1, or does not divide either head count — the same
+    divisibility-guarded degradation as ``cache_specs``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map as compat_shard_map
+
+    ms = mesh.shape[model_axis] if model_axis in mesh.axis_names else 1
+    n_heads, n_kv = q.shape[1], pk.shape[2]
+    if ms <= 1 or n_heads % ms or n_kv % ms:
+        return paged_attention(q, pk, pv, table, pos,
+                               pk_scale=pk_scale, pv_scale=pv_scale,
+                               impl=impl)
+    # Resolve the backend *outside* shard_map so a context-manager
+    # override at trace time is honored inside every shard.
+    impl = impl or resolve_paged_attn_backend()
+    head = P(None, model_axis, None)
+    pool = P(None, None, model_axis, None)
+    args = [q, pk, pv, table, pos]
+    in_specs = [head, pool, pool, P(None, None), P(None)]
+    if pk_scale is not None:
+        args += [pk_scale, pv_scale]
+        in_specs += [pool, pool]
+
+    def shard_fn(q_, pk_, pv_, tbl_, pos_, *scales):
+        ks, vs = scales if scales else (None, None)
+        return paged_attention(q_, pk_, pv_, tbl_, pos_,
+                               pk_scale=ks, pv_scale=vs, impl=impl)
+
+    return compat_shard_map(shard_fn, mesh=mesh,
+                            in_specs=tuple(in_specs), out_specs=head,
+                            check_vma=False)(*args)
+
+
 def quantize_page_pool(x) -> Tuple[jax.Array, jax.Array]:
     """Symmetric int8 quantization over the head dim (the pool layout's
     per-page scale planes): returns ``(int8 values, bf16 scales)`` with

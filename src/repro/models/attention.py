@@ -389,6 +389,7 @@ def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
     page-granular.
     """
     from repro.kernels.paged_attn import (paged_attention,
+                                          paged_attention_sharded,
                                           resolve_paged_attn_backend)
     if CACHE_QUANT["enabled"]:
         raise NotImplementedError(
@@ -443,9 +444,18 @@ def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
         vv = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
         out = _sdpa(q, kk, vv, mask, sharder)
     else:
-        out = paged_attention(q[:, 0], pk, pv, page_table, pos,
-                              pk_scale=pk_s, pv_scale=pv_s,
-                              impl=impl)[:, None]     # (B, 1, H, hd)
+        mesh = getattr(sharder, "mesh", None)
+        if mesh is not None:
+            # Mesh-aware engines run the fused kernel (or its XLA twin)
+            # per shard: each model rank attends its own head slice
+            # against its slice of the page pool, pages replicated.
+            out = paged_attention_sharded(
+                q[:, 0], pk, pv, page_table, pos, mesh=mesh,
+                pk_scale=pk_s, pv_scale=pv_s, impl=impl)[:, None]
+        else:
+            out = paged_attention(q[:, 0], pk, pv, page_table, pos,
+                                  pk_scale=pk_s, pv_scale=pv_s,
+                                  impl=impl)[:, None]  # (B, 1, H, hd)
     out = out.reshape(b, 1, cfg.n_heads * hd)
     return linear_apply(p["o"], out), new_cache
 

@@ -257,7 +257,14 @@ def moe_apply(p, x: Array, cfg, *, mesh=None,
         return y, aux
 
     ms = mesh.shape[model_axis]
-    assert e % ms == 0, f"{e} experts not divisible by model axis {ms}"
+    if e % ms:
+        # Divisibility-guarded like every sharding rule: a model axis
+        # that cannot split the expert count degrades to the replicated
+        # local path (param_specs leaves the expert weights unsharded
+        # under the same guard, so this is GSPMD-consistent) instead of
+        # refusing to serve on an odd mesh shape.
+        y, aux = _moe_local(x, p, cfg, cfg.act, 0, e, None)
+        return y, aux
     e_local = e // ms
     use_a2a = (EP_IMPL["impl"] == "all_to_all"
                and x.shape[1] % ms == 0 and x.shape[1] >= ms)

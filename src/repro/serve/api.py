@@ -144,7 +144,8 @@ class EngineOptions:
 
 
 def make_engine(cfg, params, kind: str = "slot",
-                options: Optional[EngineOptions] = None, **overrides):
+                options: Optional[EngineOptions] = None, *,
+                mesh=None, **overrides):
     """Build a serving engine — the single blessed construction path.
 
     ``kind`` selects the engine class; ``options`` (plus keyword
@@ -161,6 +162,16 @@ def make_engine(cfg, params, kind: str = "slot",
     For ``kind="sequential"`` the factory also builds the jitted
     prefill/decode steps the legacy constructor requires, so callers
     stop hand-assembling them.
+
+    ``mesh`` (a ``("data", "model")`` :class:`jax.sharding.Mesh`) turns
+    the slot/paged fast path tensor-parallel: params and KV storage are
+    committed to the sharding rules of ``repro.distributed.sharding``
+    (TP over heads, expert-parallel MoE, replicated page table) and the
+    decode windows run GSPMD-partitioned with the paged-attention step
+    per-shard under ``shard_map`` — token-identical to the single-device
+    engines, same zero-steady-state-compile invariants.  The sequential
+    engine has no mesh path (its per-shape recompiles are exactly what
+    the fast path exists to remove).
     """
     import jax
 
@@ -183,6 +194,9 @@ def make_engine(cfg, params, kind: str = "slot",
                   expert_backend=opts.expert_backend,
                   coexec_backend=opts.coexec_backend)
     if kind == "sequential":
+        if mesh is not None:
+            raise ValueError(
+                "mesh-aware serving requires kind='slot' or 'paged'")
         if "prefill_fn" not in passthrough:
             passthrough["prefill_fn"] = jax.jit(
                 make_prefill_step(cfg, cache_len=opts.max_seq))
@@ -192,6 +206,8 @@ def make_engine(cfg, params, kind: str = "slot",
         return ServeEngine(cfg, params, **common, **passthrough)
     common.update(window=opts.window,
                   prefill_bucketing=opts.buckets != "off")
+    if mesh is not None:
+        common["mesh"] = mesh
     if opts.ladder is not None:
         common["ladder"] = opts.ladder
     if kind == "slot":

@@ -38,6 +38,17 @@ needs: an always-on service wrapping one engine, with
   state serves with ``stats["decode_compiles"] == 0`` — the serving
   loop is exactly as compile-stable online as offline.
 
+* **Fault recovery** (mesh-aware engines): pass a
+  :class:`~repro.distributed.fault.StragglerWatchdog` and a
+  ``device_probe`` callable and the scheduler times every decode window
+  into the watchdog; a flagged straggler (and, cheaply, every cycle)
+  re-probes the device set, and a shrunk probe triggers
+  :func:`~repro.distributed.fault.plan_elastic_mesh` + the engine's
+  ``remesh()``: victims are released back to the queue and re-prefilled
+  on the rebuilt mesh instead of crashing the serve.  Greedy decoding
+  regenerates the identical prefix, so the emit dedup
+  (``req.generated[n:]``) resumes every interrupted stream seamlessly.
+
 Token identity: the slot/paged engines' rows are batch-invariant and
 their batched prefill is bitwise the single-prompt prefill per row, so
 the frontend's reordered, coalesced admission produces exactly the
@@ -143,9 +154,20 @@ class ServeFrontend:
     be read at any time.
     """
 
-    def __init__(self, engine, *, idle_wait: float = 0.002):
+    def __init__(self, engine, *, idle_wait: float = 0.002,
+                 watchdog=None, device_probe=None, min_data: int = 1):
         self.engine = engine
         self.idle_wait = idle_wait
+        # Fault recovery (mesh-aware engines only): `watchdog` is a
+        # StragglerWatchdog fed with per-window step times; `device_probe`
+        # returns the currently-healthy device list (tests shrink a fake
+        # set via repro.distributed.fault.simulate_failure).
+        self.watchdog = watchdog
+        self.device_probe = device_probe
+        self.min_data = min_data
+        self.remeshes = 0
+        self._healthy_n: Optional[int] = None
+        self._step_idx = 0
         self._intake: "queue.Queue" = queue.Queue()
         self._backlog: "queue.Queue" = queue.Queue()
         self._mutex = threading.Lock()      # engine + tracking state
@@ -307,7 +329,16 @@ class ServeFrontend:
                 break
             moved = self._intake_flush()
             with self._mutex:
+                self._check_devices()
+                t0 = time.perf_counter()
                 consumed = self.engine.step(finished)
+                dt = time.perf_counter() - t0
+                if self.watchdog is not None and consumed:
+                    if self.watchdog.observe(self._step_idx, dt):
+                        # A stalled window is how a lost shard shows up
+                        # from inside the host loop — re-probe at once.
+                        self._check_devices()
+                    self._step_idx += 1
                 self._emit_new()
                 finished.clear()
             if self._stop.is_set() and not consumed and not moved \
@@ -318,6 +349,49 @@ class ServeFrontend:
                 self._wake.clear()
         if self._abort.is_set():
             self._abort_inflight()
+
+    # -- fault recovery --------------------------------------------------
+    def _check_devices(self) -> None:
+        """Probe device health (mutex held, scheduler thread only); a
+        shrunk probe triggers elastic recovery."""
+        if self.device_probe is None:
+            return
+        healthy = list(self.device_probe())
+        if self._healthy_n is not None and len(healthy) < self._healthy_n:
+            self._recover(healthy)
+        self._healthy_n = len(healthy)
+
+    def _recover(self, healthy) -> None:
+        """Rebuild the engine's mesh on the surviving devices and release
+        the victims for re-prefill (mutex held).
+
+        The model axis is kept when it still fits and halved otherwise
+        (param sharding must stay divisible); the data axis absorbs the
+        rest.  Interrupted requests keep their handles: ``remesh()``
+        clears their generated streams and greedy decoding regenerates
+        the same prefix, so ``_emit_new``'s per-request counters skip the
+        already-delivered tokens automatically.
+        """
+        from repro.distributed.fault import plan_elastic_mesh
+        eng = self.engine
+        if getattr(eng, "mesh", None) is None or not hasattr(eng, "remesh"):
+            return
+        mp = eng.mesh.shape.get("model", 1)
+        plan = None
+        while mp >= 1:
+            plan = plan_elastic_mesh(len(healthy), model_parallel=mp,
+                                     min_data=self.min_data)
+            if plan is not None:
+                break
+            mp //= 2
+        if plan is None:
+            return      # nothing serveable left; keep limping, don't crash
+        from jax.sharding import Mesh
+        d, mp = plan
+        mesh = Mesh(np.asarray(healthy[:d * mp]).reshape(d, mp),
+                    ("data", "model"))
+        eng.remesh(mesh)
+        self.remeshes += 1
 
     def _abort_inflight(self) -> None:
         with self._mutex:
@@ -382,6 +456,9 @@ class ServeFrontend:
                 "completed": len(comps),
                 "inflight": len(self._handles) - len(comps),
                 "coalesced_prefills": self.coalesced_prefills,
+                "remeshes": self.remeshes,
+                "stragglers": (len(self.watchdog.flagged)
+                               if self.watchdog is not None else 0),
                 "ttft": [c.ttft for c in comps],
                 "tpot": [c.tpot for c in comps if c.n_tokens > 1],
             }

@@ -146,7 +146,8 @@ class PagedKVCache:
     """
 
     def __init__(self, max_slots: int, num_pages: int, page_size: int,
-                 max_pages_per_slot: int, quant: Optional[str] = None):
+                 max_pages_per_slot: int, quant: Optional[str] = None,
+                 sharding_fn=None, table_sharding=None):
         if num_pages < max_pages_per_slot:
             raise ValueError(
                 f"pool of {num_pages} pages cannot hold one full-length "
@@ -172,6 +173,26 @@ class PagedKVCache:
         self._orphaned = 0                         # refcount>0, no owner
         self.reserved_total = 0
 
+        # Mesh-aware pools: committed to cache_specs shardings at
+        # allocation, with every jitted op re-constraining its outputs
+        # (pool AND table) so the decode window's input shardings never
+        # drift — a drift would change the jit compile key and cost one
+        # recompile per window.
+        self._sharding_fn = sharding_fn
+        self._table_sharding = table_sharding
+
+        def _cp(pools):
+            if sharding_fn is not None:
+                pools = jax.lax.with_sharding_constraint(
+                    pools, sharding_fn(pools))
+            return pools
+
+        def _ct(table):
+            if table_sharding is not None:
+                table = jax.lax.with_sharding_constraint(
+                    table, table_sharding)
+            return table
+
         donate = () if jax.default_backend() == "cpu" else (0, 1)
         psz = page_size
 
@@ -185,28 +206,31 @@ class PagedKVCache:
                 return b.at[:, fresh].set(c[:, n_shared:])
 
             pools = jax.tree.map(scatter, pools, chunks)
-            return pools, jax.lax.dynamic_update_slice(
-                table, pages[None], (slot, jnp.int32(0)))
+            return _cp(pools), _ct(jax.lax.dynamic_update_slice(
+                table, pages[None], (slot, jnp.int32(0))))
 
         self._admit_op = jax.jit(admit_op, static_argnames=("n_shared",),
                                  donate_argnums=donate)
         self._grow_op = jax.jit(
-            lambda table, pages, slot, start: jax.lax.dynamic_update_slice(
-                table, pages[None], (slot, start)),
+            lambda table, pages, slot, start: _ct(
+                jax.lax.dynamic_update_slice(
+                    table, pages[None], (slot, start))),
             donate_argnums=() if jax.default_backend() == "cpu" else (0,))
         self._clear_op = jax.jit(
-            lambda table, slot: jax.lax.dynamic_update_slice(
+            lambda table, slot: _ct(jax.lax.dynamic_update_slice(
                 table, jnp.full((1, max_pages_per_slot), self.sink,
-                                jnp.int32), (slot, jnp.int32(0))),
+                                jnp.int32), (slot, jnp.int32(0)))),
             donate_argnums=() if jax.default_backend() == "cpu" else (0,))
 
         def cow_op(pools, table, src, dst, slot, idx):
             pools = jax.tree.map(lambda b: b.at[:, dst].set(b[:, src]),
                                  pools)
-            return pools, jax.lax.dynamic_update_slice(
-                table, dst[None, None], (slot, idx))
+            return _cp(pools), _ct(jax.lax.dynamic_update_slice(
+                table, dst[None, None], (slot, idx)))
 
         self._cow_op = jax.jit(cow_op, donate_argnums=donate)
+        if table_sharding is not None:
+            self.table = jax.device_put(self.table, table_sharding)
 
     # -- slot free list (same discipline as SlotKVCache) ---------------
     @property
@@ -299,6 +323,9 @@ class PagedKVCache:
                     x.shape[:1] + (self.num_pages + 1, self.page_size)
                     + x.shape[3:], x.dtype),
                 struct)
+            if self._sharding_fn is not None:
+                self.pools = jax.device_put(self.pools,
+                                            self._sharding_fn(self.pools))
         fresh = [self._free_pages.pop() for _ in range(n_fresh)]
         pages = shared + fresh
         for pg in shared:
@@ -446,6 +473,8 @@ class PagedKVCache:
         self.reserved_total = 0
         self.table = jnp.full((self.max_slots, self.max_pages_per_slot),
                               self.sink, jnp.int32)
+        if self._table_sharding is not None:
+            self.table = jax.device_put(self.table, self._table_sharding)
 
     def resident_bytes(self) -> int:
         """Bytes of persistent paged storage: pool (incl. sink page and,
@@ -532,11 +561,20 @@ class PagedServeEngine(SlotServeEngine):
         return None
 
     def _default_decode_fn(self):
-        return make_paged_decode_step(self.cfg)
+        return make_paged_decode_step(self.cfg, self.mesh, batch_axes=())
 
     def _make_cache(self):
+        table_sharding = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            # Page table replicated: every shard resolves every row's
+            # logical -> physical mapping (pages are head-sharded, not
+            # page-sharded, so indirection must be mesh-global).
+            table_sharding = NamedSharding(self.mesh, P())
         return PagedKVCache(self.max_batch, self.num_pages, self.page_size,
-                            self.max_pages_per_slot, quant=self.kv_quant)
+                            self.max_pages_per_slot, quant=self.kv_quant,
+                            sharding_fn=self._sharding_fn(),
+                            table_sharding=table_sharding)
 
     def _bucket_len(self, s: int) -> Optional[int]:
         # Page-multiple buckets instead of powers of two: prefill
@@ -549,6 +587,14 @@ class PagedServeEngine(SlotServeEngine):
         super().reset()
         self._prefix_registry.clear()
         self._page_key.clear()
+
+    def remesh(self, new_mesh) -> List[Request]:
+        victims = super().remesh(new_mesh)
+        # The rebuilt pool starts empty: every registry entry points at
+        # a page of the lost mesh's pool.
+        self._prefix_registry.clear()
+        self._page_key.clear()
+        return victims
 
     # -- page accounting ------------------------------------------------
     def _pages_for(self, req: Request) -> int:
@@ -706,6 +752,7 @@ class PagedServeEngine(SlotServeEngine):
 
             (pools, toks, pos, budget), out = jax.lax.scan(
                 body, (pools, toks, pos, budget), None, length=T)
+            pools = self._constrain_caches(pools)
             return pools, toks, pos, budget, out
 
         donate = () if jax.default_backend() == "cpu" else (1,)

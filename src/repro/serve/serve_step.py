@@ -13,7 +13,8 @@ from typing import Any, Dict, Optional
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import mesh_axes_for, MeshSharder
+from repro.distributed.sharding import (cache_specs as _cache_specs,
+                                        mesh_axes_for, MeshSharder)
 from repro.models import forward_decode, forward_prefill
 from repro.models.common import IDENTITY_SHARDER
 
@@ -21,9 +22,13 @@ PyTree = Any
 
 
 def make_prefill_step(cfg: ModelConfig, mesh=None, *,
-                      cache_len: Optional[int] = None):
-    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
-    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+                      cache_len: Optional[int] = None, batch_axes=None):
+    sharder = (MeshSharder(mesh, cfg, batch_axes=batch_axes)
+               if mesh is not None else IDENTITY_SHARDER)
+    if mesh is None:
+        batch_axes = ()
+    elif batch_axes is None:
+        batch_axes = mesh_axes_for(mesh).batch
 
     def prefill_step(params, batch: Dict[str, jax.Array]):
         return forward_prefill(params, cfg, batch, cache_len=cache_len,
@@ -34,7 +39,8 @@ def make_prefill_step(cfg: ModelConfig, mesh=None, *,
 
 
 def make_bucketed_prefill_step(cfg: ModelConfig, mesh=None, *,
-                               cache_len: Optional[int] = None):
+                               cache_len: Optional[int] = None,
+                               batch_axes=None):
     """Prefill over pad-to-bucket prompts: one compilation per bucket.
 
     The returned step takes ``batch = {"tokens": (1, S_bucket) int32,
@@ -46,8 +52,12 @@ def make_bucketed_prefill_step(cfg: ModelConfig, mesh=None, *,
     Trailing pad K/V lands in cache slots the per-row decode mask keeps
     invisible until the decode loop overwrites them (slot engine).
     """
-    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
-    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+    sharder = (MeshSharder(mesh, cfg, batch_axes=batch_axes)
+               if mesh is not None else IDENTITY_SHARDER)
+    if mesh is None:
+        batch_axes = ()
+    elif batch_axes is None:
+        batch_axes = mesh_axes_for(mesh).batch
 
     def prefill_step(params, batch: Dict[str, jax.Array]):
         return forward_prefill(params, cfg, batch, cache_len=cache_len,
@@ -58,9 +68,13 @@ def make_bucketed_prefill_step(cfg: ModelConfig, mesh=None, *,
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, mesh=None):
-    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
-    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+def make_decode_step(cfg: ModelConfig, mesh=None, *, batch_axes=None):
+    sharder = (MeshSharder(mesh, cfg, batch_axes=batch_axes)
+               if mesh is not None else IDENTITY_SHARDER)
+    if mesh is None:
+        batch_axes = ()
+    elif batch_axes is None:
+        batch_axes = mesh_axes_for(mesh).batch
 
     def decode_step(params, caches, tokens: jax.Array, pos: jax.Array):
         return forward_decode(params, cfg, tokens, caches, pos,
@@ -70,7 +84,7 @@ def make_decode_step(cfg: ModelConfig, mesh=None):
     return decode_step
 
 
-def make_paged_decode_step(cfg: ModelConfig, mesh=None):
+def make_paged_decode_step(cfg: ModelConfig, mesh=None, *, batch_axes=None):
     """Decode step over block-granular paged KV storage.
 
     The returned step takes ``(params, pools, page_table, tokens, pos)``
@@ -83,8 +97,12 @@ def make_paged_decode_step(cfg: ModelConfig, mesh=None):
     fixed-shape operand, so page-table *growth* (writing more entries)
     never changes any argument shape and never triggers a recompile.
     """
-    sharder = MeshSharder(mesh, cfg) if mesh is not None else IDENTITY_SHARDER
-    batch_axes = mesh_axes_for(mesh).batch if mesh is not None else ()
+    sharder = (MeshSharder(mesh, cfg, batch_axes=batch_axes)
+               if mesh is not None else IDENTITY_SHARDER)
+    if mesh is None:
+        batch_axes = ()
+    elif batch_axes is None:
+        batch_axes = mesh_axes_for(mesh).batch
 
     def decode_step(params, pools, page_table: jax.Array,
                     tokens: jax.Array, pos: jax.Array):
@@ -95,32 +113,12 @@ def make_paged_decode_step(cfg: ModelConfig, mesh=None):
     return decode_step
 
 
-def cache_specs(cache_shapes: PyTree, cfg: ModelConfig, mesh) -> PyTree:
+def cache_specs(cache_shapes: PyTree, cfg: ModelConfig, mesh, *,
+                batch_axes=None) -> PyTree:
     """PartitionSpecs for a cache pytree (stacked leading layer dim).
 
-    KV caches: heads over ``model`` when divisible, else sequence over
-    ``model``.  Recurrent states: feature dim over ``model``.  Batch over
-    the batch axes when divisible.
+    Thin delegate kept for import compatibility — the canonical,
+    leaf-name-aware rules (dense slot KV *and* the paged page pool) live
+    in :func:`repro.distributed.sharding.cache_specs`.
     """
-    from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import _fit, mesh_axes_for
-
-    ax = mesh_axes_for(mesh)
-    head_ok = cfg.n_kv_heads % mesh.shape[ax.model] == 0
-
-    def spec_for(leaf):
-        shape = tuple(leaf.shape)
-        # leading dim = stacked layers (scan); second = batch
-        batch = _fit(mesh, shape[1], ax.batch)
-        if len(shape) == 5:            # (L, B, cap, Hkv, hd) KV cache
-            if head_ok:
-                return P(None, batch, None,
-                         _fit(mesh, shape[3], ax.model), None)
-            return P(None, batch, _fit(mesh, shape[2], ax.model), None, None)
-        if len(shape) == 4:            # (L, B, H, ...) rwkv shift? / conv
-            return P(None, batch, None, None)
-        if len(shape) == 3:            # (L, B, d) states
-            return P(None, batch, _fit(mesh, shape[2], ax.model))
-        return P(*([None] * len(shape)))
-
-    return jax.tree.map(spec_for, cache_shapes)
+    return _cache_specs(cache_shapes, cfg, mesh, batch_axes=batch_axes)

@@ -63,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, LOCAL, ModelConfig
+from repro.distributed.sharding import (cache_specs, param_specs, to_named)
 from repro.serve.api import completion_of, Completion
 from repro.serve.engine import (choose_decode_batch, init_serve_stats,
                                 note_first_token, record_step_packing,
@@ -98,16 +99,28 @@ class SlotKVCache:
     admission costs one dynamic-slice store, never a concatenate.
     """
 
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int, sharding_fn=None):
         self.max_slots = max_slots
         self.buffers: Optional[List[PyTree]] = None
         self._free = list(range(max_slots - 1, -1, -1))  # pop() -> lowest
+        # Mesh-aware engines inject ``sharding_fn(tree) -> tree of
+        # NamedSharding``; buffers are committed to those shardings at
+        # allocation AND every jitted update re-constrains its output,
+        # so the window jit always sees one stable input sharding (a
+        # drift would change the compile key — one silent recompile per
+        # window, exactly what the ladder exists to prevent).
+        self._sharding_fn = sharding_fn
         donate = () if jax.default_backend() == "cpu" else (0,)
-        self._write = jax.jit(
-            lambda bufs, new, slot: jax.tree.map(
+
+        def write_op(bufs, new, slot):
+            out = jax.tree.map(
                 lambda b, n: jax.lax.dynamic_update_slice_in_dim(
-                    b, n, slot, axis=1), bufs, new),
-            donate_argnums=donate)
+                    b, n, slot, axis=1), bufs, new)
+            if sharding_fn is not None:
+                out = jax.lax.with_sharding_constraint(out, sharding_fn(out))
+            return out
+
+        self._write = jax.jit(write_op, donate_argnums=donate)
 
     @property
     def n_free(self) -> int:
@@ -144,6 +157,9 @@ class SlotKVCache:
                 lambda x: jnp.zeros(
                     x.shape[:1] + (self.max_slots,) + x.shape[2:], x.dtype),
                 prefill_cache)
+            if self._sharding_fn is not None:
+                self.buffers = jax.device_put(
+                    self.buffers, self._sharding_fn(self.buffers))
         self.buffers = self._write(self.buffers, prefill_cache,
                                    jnp.int32(slot))
 
@@ -167,9 +183,25 @@ class SlotServeEngine:
                  prefill_bucketing: bool = True,
                  prefill_is_bucketed: Optional[bool] = None,
                  expert_backend: Optional[str] = None,
-                 coexec_backend: Optional[str] = None):
+                 coexec_backend: Optional[str] = None,
+                 mesh=None):
         del cache_init_fn  # slot buffers are shaped from the first prefill
         self.cfg = cfg
+        if mesh is not None and (prefill_fn is not None
+                                 or decode_fn is not None):
+            raise ValueError(
+                "mesh-aware engines build their own sharded serve steps; "
+                "injected prefill_fn/decode_fn cannot be re-sharded on "
+                "remesh — drop them or drop mesh=")
+        self.mesh = mesh
+        # Host-side master copy: remesh() re-commits it to the surviving
+        # devices, so recovery never reads back a sharded array that may
+        # have lost a shard.
+        self._host_params = params
+        if mesh is not None:
+            params = jax.device_put(
+                params, to_named(param_specs(params, cfg, mesh, fsdp=False),
+                                 mesh))
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -195,8 +227,7 @@ class SlotServeEngine:
         if prefill_fn is None:
             self._bucket_enabled = prefill_bucketing and structurally_ok
             self._prefill_needs_index = True
-            self.prefill_fn = jax.jit(make_bucketed_prefill_step(
-                cfg, cache_len=self._prefill_cache_len()))
+            self.prefill_fn = jax.jit(self._make_prefill_step())
         else:
             self.prefill_fn = prefill_fn
             self._prefill_needs_index = bool(prefill_is_bucketed)
@@ -243,6 +274,7 @@ class SlotServeEngine:
             "prefill_bucket_hits": 0, "prefill_bucket_misses": 0,
             "prefill_batches": 0, "prefill_batched_reqs": 0,
             "slot_admits": 0, "slot_releases": 0,
+            "remeshes": 0,
         }
 
     def _prefill_cache_len(self) -> Optional[int]:
@@ -250,11 +282,42 @@ class SlotServeEngine:
         dense slot engine prefills straight into slot shape)."""
         return self.max_seq
 
+    def _make_prefill_step(self):
+        # batch_axes=() on a mesh: the prefill batch dim is a slot
+        # group, not a data-parallel batch — rows stay replicated over
+        # "data" and shard only activations/heads over "model".
+        return make_bucketed_prefill_step(
+            self.cfg, self.mesh, cache_len=self._prefill_cache_len(),
+            batch_axes=())
+
     def _default_decode_fn(self):
-        return make_decode_step(self.cfg)
+        return make_decode_step(self.cfg, self.mesh, batch_axes=())
 
     def _make_cache(self):
-        return SlotKVCache(self.max_batch)
+        return SlotKVCache(self.max_batch, sharding_fn=self._sharding_fn())
+
+    # ------------------------------------------------------------------
+    # Mesh plumbing (no-ops on single-device engines)
+    # ------------------------------------------------------------------
+    def _sharding_fn(self):
+        """``tree -> tree of NamedSharding`` from the canonical
+        :func:`repro.distributed.sharding.cache_specs` rules, or None
+        when single-device."""
+        if self.mesh is None:
+            return None
+
+        def fn(tree):
+            return to_named(cache_specs(tree, self.cfg, self.mesh,
+                                        batch_axes=()), self.mesh)
+        return fn
+
+    def _constrain_caches(self, tree):
+        """Pin a jitted window's cache outputs to the allocation-time
+        shardings so input and output shardings agree across windows."""
+        fn = self._sharding_fn()
+        if fn is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, fn(tree))
 
     def reset(self) -> None:
         """Clear all serving state for a fresh serve on the same engine.
@@ -273,6 +336,58 @@ class SlotServeEngine:
         self.stats = init_serve_stats(self.coexec_backend,
                                       self._expert_backend)
         self.stats["engine"].update(self._stats_extras())
+
+    def remesh(self, new_mesh) -> List[Request]:
+        """Rebuild every device-side structure on ``new_mesh`` and
+        re-queue the in-flight victims for re-prefill.
+
+        The lost-shard recovery path (wired into
+        :class:`repro.serve.frontend.ServeFrontend` via
+        ``distributed/fault.py``): when the healthy device set shrinks,
+        the old mesh's arrays are unusable, so every resident request is
+        *released* — its generated tokens cleared, the request pushed
+        back to the queue head in admission order — and params, serve
+        steps, window jits, and cache storage are rebuilt against the
+        survivors' mesh.  Greedy decode is deterministic, so each victim
+        regenerates its identical token prefix and streams resume
+        seamlessly (the frontend emits ``generated[n_emitted:]``, which
+        simply stays empty until the re-serve passes the old
+        watermark).  Returns the victims for observability.
+        """
+        if self.mesh is None:
+            raise ValueError("remesh requires a mesh-aware engine "
+                             "(construct with mesh=...)")
+        victims: List[Request] = []
+        for slot in range(self.max_batch):
+            if self._req[slot] is not None:
+                victims.append(self._req[slot])
+                self._req[slot] = None
+        victims.extend(req for req, _cache, _pos in self._backfilled)
+        self._backfilled.clear()
+        for req in victims:
+            req.generated = []
+            req.done = False
+            req.finished_at = None
+        for req in reversed(victims):
+            self.queue.appendleft(req)
+        self._tok[:] = 0
+        self._pos[:] = 0
+        self._budget[:] = 0
+
+        self.mesh = new_mesh
+        self.params = jax.device_put(
+            self._host_params,
+            to_named(param_specs(self._host_params, self.cfg, new_mesh,
+                                 fsdp=False), new_mesh))
+        self.prefill_fn = jax.jit(self._make_prefill_step())
+        self._seen_buckets.clear()
+        self.decode_fn = self._default_decode_fn()
+        self._window_traces = 0
+        self._compile_base = 0
+        self._window_fn = self._build_window_fn()
+        self.cache = self._make_cache()
+        self.stats["engine"]["remeshes"] += 1
+        return victims
 
     # ------------------------------------------------------------------
     # Jitted multi-token decode window
@@ -319,6 +434,7 @@ class SlotServeEngine:
             caches = jax.tree.map(
                 lambda full, s: jax.lax.dynamic_update_slice_in_dim(
                     full, s, 0, axis=1), caches, sub)
+            caches = self._constrain_caches(caches)
             return caches, toks, pos, budget, out
 
         donate = () if jax.default_backend() == "cpu" else (1,)

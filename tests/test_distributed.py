@@ -60,10 +60,12 @@ class TestParamSpecs:
         assert o == P(None, "model", "data")
 
     def test_gemma3_heads_replicated_over_model(self):
-        # 4 heads % 16 != 0 -> replicate head dim, keep FSDP
+        # 4 heads % 16 != 0 -> replicate head dim, keep FSDP.  Specs are
+        # canonical (trailing Nones stripped): replicated trailing dims
+        # are implicit, matching with_sharding_constraint's spelling.
         cfg, shapes, specs = self._specs("gemma3-1b", MESH_1POD)
         q = specs["groups"][0]["b0"]["mixer"]["q"]["w"]
-        assert q == P(None, "data", None)
+        assert q == P(None, "data")
 
     def test_mlp_col_row(self):
         cfg, shapes, specs = self._specs("yi-6b", MESH_1POD)
@@ -74,8 +76,9 @@ class TestParamSpecs:
     def test_moe_expert_parallel(self):
         cfg, shapes, specs = self._specs("dbrx-132b", MESH_1POD)
         blk = specs["groups"][0]["b0"]
-        # (E, d, ff): E over model, d over data
-        assert blk["moe"]["up"] == P(None, "model", "data", None)
+        # (E, d, ff): E over model, d over data (ff replicated, implicit
+        # under canonical trailing-None-stripped specs)
+        assert blk["moe"]["up"] == P(None, "model", "data")
         assert blk["moe"]["router"] in (P(), P(None))  # replicated
 
     def test_embed_vocab_sharded(self):
