@@ -35,7 +35,8 @@ def main() -> None:
     from benchmarks.serve_bench import (bench_serving,
                                         bench_serving_frontend,
                                         bench_serving_paged,
-                                        bench_serving_sharded)
+                                        bench_serving_sharded,
+                                        bench_serving_slo)
     from benchmarks.slab_ablation import bench_slab_ablation
 
     benches = [bench_table2_shapes, bench_table3_area_energy,
@@ -43,7 +44,7 @@ def main() -> None:
                bench_fig7_casestudy, bench_kernels, bench_grouped_kernels,
                bench_slab_ablation, bench_multi_tenant, bench_serving,
                bench_serving_paged, bench_serving_frontend,
-               bench_serving_sharded]
+               bench_serving_slo, bench_serving_sharded]
     if args.quick:
         # CI smoke: the analytic benches are already fast; skip the slow
         # interpret-mode kernel sweep and shrink the packing/grouped
@@ -55,6 +56,7 @@ def main() -> None:
                    functools.partial(bench_serving, quick=True),
                    functools.partial(bench_serving_paged, quick=True),
                    functools.partial(bench_serving_frontend, quick=True),
+                   functools.partial(bench_serving_slo, quick=True),
                    functools.partial(bench_serving_sharded, quick=True)]
 
     def _name(b) -> str:

@@ -425,6 +425,166 @@ def bench_serving_frontend(quick: bool = False,
     ]
 
 
+def bench_serving_slo(quick: bool = False) -> List[Row]:
+    """Overload SLO benchmark: interactive TTFT under a saturating
+    batch load, with and without the scheduling policy (PR 9).
+
+    A paged engine with a deliberately tight page pool (every batch
+    tenant's worst-case reservation leaves < 1 interactive admission
+    of headroom) is loaded with long-budget batch requests; interactive
+    requests then arrive mid-serve.  The same workload is served
+    through the online frontend (best-of-3 per side) under two
+    policies:
+
+    * **policy** — the default :class:`SchedulingPolicy` (class
+      priority + preemption): each interactive arrival preempts a
+      batch victim, which is requeued and later resumed token-
+      identically via re-prefill of its generated prefix;
+    * **no-policy** — ``SchedulingPolicy(class_priority=False,
+      preemption=False)``: strict FIFO, so interactive requests wait
+      for the batch load to drain the pool.
+
+    Rows (scaling follows the repo convention that ratio rows are
+    x1000 so they clear the check_bench floor clamp):
+
+    * ``serve_slo_interactive_p99_ttft`` — user-observed interactive
+      p99 TTFT in microseconds under the policy, hard-bounded in
+      scripts/check_bench.py (preemption must keep interactive
+      admission prompt even with zero pool headroom);
+    * ``serve_slo_ttft_gain`` — policy over no-policy interactive p99
+      TTFT x1000, hard-bounded < 1000: the policy must strictly beat
+      the FIFO baseline or the preemption machinery is dead weight;
+    * ``serve_slo_preempt_rate`` — preemptions per interactive
+      arrival x1000 (reconciled against slot admit/release accounting
+      by tests/test_overload.py).
+
+    Token streams are asserted identical between the two runs — the
+    policy moves *when* work runs, never *what* it computes — and the
+    policy run must stay at zero post-warmup decode compiles across
+    every preempt/re-admit cycle.
+    """
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.serve import (KLASS_INTERACTIVE, SchedulingPolicy,
+                             ServeFrontend, make_engine)
+
+    cfg = smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_batch = 4
+    max_seq = 64
+    window = 4
+    page_size = 8
+    num_pages = 8          # one batch tenant reserves 6-7 of these
+    n_batch = 8 if quick else 12
+    n_inter = 4 if quick else 6
+    batch_budget = 24 if quick else 40
+
+    rng = np.random.default_rng(23)
+    # Reservation geometry (see PagedServeEngine._pages_for): batch
+    # prompts are sized so each tenant's worst-case reservation is 6-7
+    # pages (<= 2 free), while interactive prompts need 3-4 pages —
+    # an interactive arrival therefore *never* fits beside a batch
+    # resident and must be admitted via preemption, independent of
+    # host timing.
+    lo = max_seq - batch_budget - 15
+    batch_prompts = [rng.integers(0, 500, size=int(s)).astype(np.int32)
+                     for s in rng.integers(lo, lo + 8, size=n_batch)]
+    inter_prompts = [rng.integers(0, 500, size=int(s)).astype(np.int32)
+                     for s in rng.integers(14, 18, size=n_inter)]
+
+    def run(policy):
+        eng = make_engine(cfg, params, kind="paged", max_slots=max_batch,
+                          max_seq=max_seq, window=window,
+                          page_size=page_size, num_pages=num_pages,
+                          policy=policy)
+        fe = ServeFrontend(eng)
+        fe.warmup(max_prompt_len=max_seq)
+        # Each interactive arrival is gated on a *mid-decode* batch
+        # resident (>= 2 windows of budget left): a fixed sleep races
+        # the scheduler thread on a loaded host — batch tenants drain
+        # in milliseconds here — and an interactive arriving into an
+        # idle pool admits without pressure, which is not the scenario
+        # this bench prices.  Reading the resident table is a benign
+        # cross-thread peek (GIL-atomic list scan, poll-only).
+        def batch_mid_decode():
+            return any(r is not None and not policy.is_interactive(r)
+                       and len(r.generated) < batch_budget - 2 * window
+                       for r in eng._req)
+
+        t0 = time.perf_counter()
+        for p in batch_prompts:
+            fe.submit(p, batch_budget)
+        handles = []
+        for p in inter_prompts:
+            t_sat = time.perf_counter() + 30.0
+            while not batch_mid_decode():
+                if time.perf_counter() > t_sat:
+                    raise RuntimeError("batch load never saturated")
+                time.sleep(0.001)
+            handles.append(fe.submit(p, 4, klass=KLASS_INTERACTIVE))
+            time.sleep(0.005)
+        done = fe.drain(timeout=600)
+        elapsed = time.perf_counter() - t0
+        stats = fe.stats
+        fe.shutdown()
+        ttft = np.asarray([h.first_emitted_at - h.submitted_at
+                           for h in handles]) * 1e6
+        got = {c.rid: c.tokens for c in done}
+        assert all(c.finish_reason == "length" for c in done), \
+            "SLO bench must finish every request"
+        return elapsed, ttft, got, stats
+
+    # Best-of-3 over *interleaved pairs* (same best-of convention as
+    # the warm paged rows above, but paired): TTFT tails here are
+    # scheduler/OS timing, so each policy serve is immediately followed
+    # by its FIFO counterpart and the gain ratio is always taken within
+    # one pair — a host-load swing between the two sides of the ratio
+    # would otherwise dominate the very effect being measured.
+    fifo = SchedulingPolicy(class_priority=False, preemption=False)
+    pairs = [(run(SchedulingPolicy()), run(fifo)) for _ in range(3)]
+    (el_pol, ttft_pol, got_pol, st_pol), \
+        (el_base, ttft_base, got_base, st_base) = min(
+            pairs, key=lambda pr: float(np.percentile(pr[0][1], 99)))
+
+    assert got_pol == got_base, \
+        "preemptive serve diverged from the FIFO baseline"
+    preempts = st_pol["engine"]["preemptions"]
+    assert preempts >= 1, "saturating load never triggered preemption"
+    assert st_base["engine"]["preemptions"] == 0
+    assert st_pol["decode_compiles"] == 0, \
+        "preempt/re-admit cycles must not compile post-warmup"
+
+    p99_pol = float(np.percentile(ttft_pol, 99))
+    p99_base = float(np.percentile(ttft_base, 99))
+    gain = p99_pol / p99_base
+    rate = preempts / n_inter
+    write_csv("serve_slo",
+              ["run", "elapsed_s", "inter_ttft_p50_us", "inter_ttft_p99_us",
+               "preemptions", "warm_decode_compiles"],
+              [("policy", f"{el_pol:.3f}",
+                f"{np.percentile(ttft_pol, 50):.0f}", f"{p99_pol:.0f}",
+                preempts, st_pol["decode_compiles"]),
+               ("no_policy", f"{el_base:.3f}",
+                f"{np.percentile(ttft_base, 50):.0f}", f"{p99_base:.0f}",
+                st_base["engine"]["preemptions"],
+                st_base["decode_compiles"])])
+    return [
+        ("serve_slo_interactive_p99_ttft", p99_pol,
+         f"interactive p99 TTFT over {n_inter} arrivals into a "
+         f"saturated {num_pages}-page pool ({preempts} preemptions; "
+         f"tokens identical to FIFO; hard ceiling 2s)"),
+        ("serve_slo_ttft_gain", gain * 1000.0,
+         f"policy over no-policy interactive p99 TTFT {gain:.3f}x "
+         f"(FIFO baseline p99 {p99_base / 1e3:.0f}ms; hard bound "
+         f"< 1.0x)"),
+        ("serve_slo_preempt_rate", rate * 1000.0,
+         f"{preempts} preemptions for {n_inter} interactive arrivals "
+         f"({rate:.2f}/arrival)"),
+    ]
+
+
 _SHARDED_CODE = """
 import json
 import numpy as np, jax
@@ -553,6 +713,8 @@ if __name__ == "__main__":
     for row in bench_serving_paged(quick=True):
         print(row)
     for row in bench_serving_frontend(quick=True):
+        print(row)
+    for row in bench_serving_slo(quick=True):
         print(row)
     for row in bench_serving_sharded(quick=True):
         print(row)

@@ -64,6 +64,27 @@ HARD_MAX_US = {
     # the mesh must not cost the fast path its zero-steady-state-compile
     # invariant (ISSUE 8 acceptance bound — zero).
     "serve_sharded_warm_compiles": 0.0,
+    # interactive p99 TTFT (wall us) under a saturating batch load with
+    # the default preemptive policy: generous 2s ceiling — admission via
+    # preemption is ~one window, so anywhere near the ceiling means the
+    # policy stopped admitting interactive work (ISSUE 9 acceptance
+    # bound).
+    "serve_slo_interactive_p99_ttft": 2_000_000.0,
+    # policy over no-policy interactive p99 TTFT ratio x 1000: the
+    # scheduling policy must strictly beat the FIFO baseline on the
+    # same workload, or preemption is dead weight (ISSUE 9).
+    "serve_slo_ttft_gain": 1_000.0,
+}
+
+# Rows whose regression story is carried by a *same-run* comparison (a
+# companion ratio row measured in the same process) plus a hard ceiling
+# above, not by cross-run wall clock: raw tail-latency under deliberate
+# overload is scheduling-noise-dominated on shared runners (a single
+# 100ms host stall is 30x on a 3ms p99 but invisible to the in-run
+# gain ratio), so the cross-run ratio gate would flake without catching
+# anything the companion rows don't.
+RATIO_EXEMPT = {
+    "serve_slo_interactive_p99_ttft",   # gated via serve_slo_ttft_gain
 }
 
 
@@ -89,6 +110,10 @@ def main() -> int:
     for name, b in sorted(base.items()):
         if name not in cur:
             failures.append(f"{name}: missing from current run")
+            continue
+        if name in RATIO_EXEMPT:
+            lines.append(f"{'exempt':>10}  {name:<32} "
+                         f"{float(cur[name]['us_per_call']):>10.1f}us")
             continue
         b_us = max(float(b["us_per_call"]), args.floor_us)
         c_us = max(float(cur[name]["us_per_call"]), args.floor_us)

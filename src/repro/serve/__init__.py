@@ -1,16 +1,23 @@
 from repro.serve.api import (Completion, completion_of, EngineOptions,
                              make_engine, STATS_KEYS, validate_stats)
-from repro.serve.engine import choose_decode_batch, Request, ServeEngine
+from repro.serve.engine import (choose_decode_batch, effective_tokens,
+                                Request, ServeEngine)
+from repro.serve.faults import FaultEvent, FaultPlan
 from repro.serve.frontend import RequestHandle, ServeFrontend
 from repro.serve.paged_engine import PagedKVCache, PagedServeEngine
+from repro.serve.policy import (KLASS_BATCH, KLASS_INTERACTIVE, KLASSES,
+                                RejectedError, SchedulingPolicy)
 from repro.serve.serve_step import (cache_specs, make_bucketed_prefill_step,
                                     make_decode_step, make_paged_decode_step,
                                     make_prefill_step)
 from repro.serve.slot_engine import SlotKVCache, SlotServeEngine
 
-__all__ = ["cache_specs", "Completion", "completion_of", "EngineOptions",
+__all__ = ["cache_specs", "Completion", "completion_of", "effective_tokens",
+           "EngineOptions", "FaultEvent", "FaultPlan", "KLASS_BATCH",
+           "KLASS_INTERACTIVE", "KLASSES",
            "make_bucketed_prefill_step", "make_decode_step", "make_engine",
            "make_paged_decode_step", "make_prefill_step", "PagedKVCache",
-           "PagedServeEngine", "Request", "RequestHandle", "ServeEngine",
-           "ServeFrontend", "SlotKVCache", "SlotServeEngine", "STATS_KEYS",
-           "choose_decode_batch", "validate_stats"]
+           "PagedServeEngine", "RejectedError", "Request", "RequestHandle",
+           "SchedulingPolicy", "ServeEngine", "ServeFrontend", "SlotKVCache",
+           "SlotServeEngine", "STATS_KEYS", "choose_decode_batch",
+           "validate_stats"]

@@ -65,9 +65,11 @@ STATS_KEYS = frozenset({
     "expert_backend", "engine",
 })
 
-FINISH_LENGTH = "length"      # max_new_tokens budget exhausted
-FINISH_MAX_SEQ = "max_seq"    # hit the engine's sequence capacity
-FINISH_ABORTED = "aborted"    # cancelled before completing (frontend)
+FINISH_LENGTH = "length"        # max_new_tokens budget exhausted
+FINISH_MAX_SEQ = "max_seq"      # hit the engine's sequence capacity
+FINISH_ABORTED = "aborted"      # shutdown(drain=False) tore it down
+FINISH_CANCELLED = "cancelled"  # RequestHandle.cancel()/engine.cancel()
+FINISH_DEADLINE = "deadline"    # per-request deadline expired
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +101,10 @@ def completion_of(req) -> Completion:
     done_at = req.finished_at if req.finished_at is not None else first
     ttft = max(0.0, first - req.arrived) if req.first_token_at else 0.0
     tpot = (done_at - first) / (n - 1) if n > 1 else 0.0
-    reason = (FINISH_LENGTH if n >= req.max_new_tokens else FINISH_MAX_SEQ)
+    # Lifecycle exits (cancel, deadline) stamp an explicit reason on the
+    # request; budget accounting covers only the natural finishes.
+    reason = getattr(req, "finish_reason", None) or (
+        FINISH_LENGTH if n >= req.max_new_tokens else FINISH_MAX_SEQ)
     return Completion(rid=req.rid, tokens=tuple(req.generated),
                       ttft=ttft, tpot=max(0.0, tpot), finish_reason=reason)
 
@@ -116,6 +121,10 @@ class EngineOptions:
     sequential engine — or ``"off"`` for exact-length prefills
     everywhere).  Paged-only knobs (``page_size``, ``num_pages``,
     ``kv_quant``, ``prefix_sharing``) are ignored by the dense kinds.
+    ``policy`` is the admission-class scheduler
+    (:class:`repro.serve.policy.SchedulingPolicy`; ``None`` keeps the
+    default interactive-over-batch policy with preemption) and
+    ``default_klass`` resolves requests submitted without a class.
     """
     max_slots: int = 8
     max_seq: int = 256
@@ -129,11 +138,21 @@ class EngineOptions:
     multi_tenant: bool = True
     coexec_backend: Optional[str] = None
     expert_backend: Optional[str] = None
+    policy: Optional[Any] = None
+    default_klass: str = "batch"
 
     def __post_init__(self):
         if self.buckets not in ("auto", "off"):
             raise ValueError(f"buckets={self.buckets!r} not in "
                              "('auto', 'off')")
+        from repro.serve.policy import KLASSES, SchedulingPolicy
+        if self.default_klass not in KLASSES:
+            raise ValueError(f"default_klass={self.default_klass!r} "
+                             f"not in {KLASSES}")
+        if self.policy is not None \
+                and not isinstance(self.policy, SchedulingPolicy):
+            raise ValueError(f"policy={self.policy!r} is not a "
+                             "SchedulingPolicy")
         if self.ladder is not None:
             rungs = tuple(self.ladder)
             if not rungs or list(rungs) != sorted(set(rungs)) \
@@ -192,7 +211,8 @@ def make_engine(cfg, params, kind: str = "slot",
     common = dict(max_batch=opts.max_slots, max_seq=opts.max_seq,
                   multi_tenant=opts.multi_tenant,
                   expert_backend=opts.expert_backend,
-                  coexec_backend=opts.coexec_backend)
+                  coexec_backend=opts.coexec_backend,
+                  policy=opts.policy, default_klass=opts.default_klass)
     if kind == "sequential":
         if mesh is not None:
             raise ValueError(

@@ -69,6 +69,33 @@ class Request:
     done: bool = False
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # SLO scheduling (repro.serve.policy): admission class (None ->
+    # batch), absolute deadline stamp enforced by the frontend, times
+    # evicted under pool pressure, and an explicit finish reason for
+    # lifecycle exits (cancel/deadline) that budget accounting alone
+    # cannot express.
+    klass: Optional[str] = None
+    deadline: Optional[float] = None
+    preemptions: int = 0
+    finish_reason: Optional[str] = None
+
+
+def effective_tokens(req: Request) -> np.ndarray:
+    """Token sequence a (re-)prefill of ``req`` must run over.
+
+    Fresh requests prefill their prompt.  A preempted request resumes by
+    re-prefilling ``prompt + generated[:-1]`` — every token *written* to
+    its released cache — and re-entering decode with
+    ``tok = generated[-1]`` at ``pos = len(prompt) + len(generated) - 1``,
+    which regenerates the identical stream an unpreempted serve produces
+    (greedy decode is deterministic and causal attention makes prefill
+    and decode KV paths agree position-for-position; pinned in
+    ``tests/test_overload.py`` / ``tests/test_serve_differential.py``).
+    """
+    if not req.generated:
+        return np.asarray(req.prompt, np.int32)
+    return np.concatenate([np.asarray(req.prompt, np.int32),
+                           np.asarray(req.generated[:-1], np.int32)])
 
 
 def _llm_workload_of(cfg: ModelConfig) -> LLMWorkload:
@@ -228,7 +255,10 @@ class ServeEngine:
                  max_batch: int = 8, max_seq: int = 256,
                  multi_tenant: bool = True,
                  expert_backend: Optional[str] = None,
-                 coexec_backend: Optional[str] = None):
+                 coexec_backend: Optional[str] = None,
+                 policy=None, default_klass: str = "batch"):
+        from repro.serve.policy import SchedulingPolicy
+        self.default_klass = default_klass
         self.cfg = cfg
         self.params = params
         self.prefill_fn = prefill_fn
@@ -237,21 +267,52 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.multi_tenant = multi_tenant
+        self.policy = policy or SchedulingPolicy()
         # Co-execution: execute (not just predict) each step's packed
         # placement — deferred prefills ride the decode window and join
         # the next batch decode-ready.  Requires multi_tenant.
         self.stats: Dict[str, Any] = init_serve_stats(coexec_backend,
                                                       expert_backend)
+        self.stats["engine"].update({"cancelled": 0})
         self.coexec_backend = coexec_backend
         self._expert_backend = expert_backend
         self.queue: Deque[Request] = deque()
         # (request, prefilled cache, position): prefills completed via
         # backfill, awaiting decode admission.
         self._backfilled: Deque[Tuple[Request, Any, int]] = deque()
+        # Cancelled mid-flight, awaiting delivery via ``finished``.
+        self._cancelled: List[Request] = []
 
     def submit(self, req: Request) -> None:
         req.arrived = time.time()
-        self.queue.append(req)
+        if req.klass is None:
+            req.klass = self.default_klass
+        self.policy.enqueue(self.queue, req)
+
+    def cancel(self, rid: int) -> bool:
+        """Release a queued request mid-flight (the sequential engine
+        holds nothing resident between ``step()`` calls, so queue and
+        backfill are the whole in-flight set).  Marks the request done
+        with ``finish_reason="cancelled"``; returns True iff found."""
+        from repro.serve.api import FINISH_CANCELLED
+        for req in list(self.queue):
+            if req.rid == rid:
+                self.queue.remove(req)
+                break
+        else:
+            for item in list(self._backfilled):
+                if item[0].rid == rid:
+                    self._backfilled.remove(item)
+                    req = item[0]
+                    break
+            else:
+                return False
+        req.done = True
+        req.finish_reason = FINISH_CANCELLED
+        req.finished_at = time.time()
+        self._cancelled.append(req)
+        self.stats["engine"]["cancelled"] += 1
+        return True
 
     def reset(self) -> None:
         """Clear queues and stats for a fresh serve on the same engine.
@@ -262,8 +323,10 @@ class ServeEngine:
         """
         self.queue.clear()
         self._backfilled.clear()
+        self._cancelled.clear()
         self.stats = init_serve_stats(self.coexec_backend,
                                       self._expert_backend)
+        self.stats["engine"].update({"cancelled": 0})
 
     def _prefill_one(self, req: Request):
         s = len(req.prompt)
@@ -285,6 +348,9 @@ class ServeEngine:
         there is no work) — the granularity the online frontend drives;
         the slot engines override this with a window-boundary step.
         """
+        if self._cancelled:
+            finished.extend(self._cancelled)
+            self._cancelled.clear()
         if not (self.queue or self._backfilled) or max_steps <= 0:
             return 0
         budget = max_steps
@@ -388,4 +454,6 @@ class ServeEngine:
         finished: List[Request] = []
         while (self.queue or self._backfilled) and max_steps > 0:
             max_steps -= self.step(finished, max_steps)
+        finished.extend(self._cancelled)   # cancelled with no step after
+        self._cancelled.clear()
         return [completion_of(r) for r in finished]

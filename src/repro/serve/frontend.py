@@ -71,20 +71,24 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serve.api import (Completion, FINISH_ABORTED, FINISH_LENGTH,
-                             FINISH_MAX_SEQ)
+from repro.serve.api import (Completion, FINISH_ABORTED, FINISH_CANCELLED,
+                             FINISH_DEADLINE, FINISH_LENGTH, FINISH_MAX_SEQ)
 from repro.serve.engine import Request
+from repro.serve.policy import KLASSES, RejectedError
 
 _SHUTDOWN = object()
 
 
 class _Done:
     """Backlog sentinel: all of ``req``'s tokens precede it in the
-    backlog, so delivery order per request is tokens-then-completion."""
+    backlog, so delivery order per request is tokens-then-completion.
+    ``reason`` pins a lifecycle exit (abort/cancel/deadline); ``None``
+    means a natural finish, classified by budget accounting."""
 
-    def __init__(self, req: Request, aborted: bool = False):
+    def __init__(self, req: Request, aborted: bool = False,
+                 reason: Optional[str] = None):
         self.req = req
-        self.aborted = aborted
+        self.reason = reason or (FINISH_ABORTED if aborted else None)
 
 
 class RequestHandle:
@@ -109,6 +113,8 @@ class RequestHandle:
         self._lock = threading.Lock()
         self._done = threading.Event()
         self._completion: Optional[Completion] = None
+        # Wired by ServeFrontend.submit; standalone handles can't cancel.
+        self._cancel_cb: Optional[Callable[[int], None]] = None
 
     @property
     def tokens(self) -> List[int]:
@@ -124,6 +130,18 @@ class RequestHandle:
         if not self._done.wait(timeout):
             raise TimeoutError(f"request {self.rid} still in flight")
         return self._completion
+
+    def cancel(self) -> bool:
+        """Request mid-flight cancellation: the scheduler releases the
+        engine resources (slot/pages) at its next cycle and the handle
+        resolves with ``finish_reason="cancelled"`` (tokens delivered so
+        far are kept).  Returns False if already done (or the handle is
+        not attached to a frontend); True once the cancel is filed —
+        resolution is asynchronous, ``result()`` observes it."""
+        if self._done.is_set() or self._cancel_cb is None:
+            return False
+        self._cancel_cb(self.rid)
+        return True
 
     # Emit-thread side ---------------------------------------------------
     def _deliver(self, toks: Sequence[int]) -> None:
@@ -155,7 +173,8 @@ class ServeFrontend:
     """
 
     def __init__(self, engine, *, idle_wait: float = 0.002,
-                 watchdog=None, device_probe=None, min_data: int = 1):
+                 watchdog=None, device_probe=None, min_data: int = 1,
+                 max_queued: Optional[int] = None, fault_plan=None):
         self.engine = engine
         self.idle_wait = idle_wait
         # Fault recovery (mesh-aware engines only): `watchdog` is a
@@ -166,6 +185,24 @@ class ServeFrontend:
         self.device_probe = device_probe
         self.min_data = min_data
         self.remeshes = 0
+        # Overload robustness: `max_queued` bounds the not-yet-admitted
+        # backlog (over-limit submits raise RejectedError — typed load
+        # shedding, never a silent drop); `fault_plan` is a
+        # repro.serve.faults.FaultPlan injected at scheduler-cycle
+        # granularity (chaos testing).
+        self.max_queued = max_queued
+        self.fault_plan = fault_plan
+        self.fault_log: List[Tuple[int, str, int]] = []
+        self.rejected = 0
+        self._cycle = 0
+        self._seized_pages: List[int] = []
+        self._cancels: set = set()
+        self._slow_next = 0.0          # straggler-fault dt inflation
+        self._fault_cursor = -1        # last cycle whose faults fired
+        # Admitted-capacity overflow (batch-class only — interactive
+        # arrivals bypass the capacity cap so preemption can serve
+        # them); scheduler thread only, length read under the mutex.
+        self._deferred: List[Tuple[Request, RequestHandle]] = []
         self._healthy_n: Optional[int] = None
         self._step_idx = 0
         self._intake: "queue.Queue" = queue.Queue()
@@ -215,25 +252,59 @@ class ServeFrontend:
 
     def submit(self, prompt, max_new_tokens: int, *,
                rid: Optional[int] = None,
-               on_token: Optional[Callable[[int], None]] = None
-               ) -> RequestHandle:
-        """Enqueue one request; returns its streaming handle at once."""
+               on_token: Optional[Callable[[int], None]] = None,
+               klass: Optional[str] = None,
+               deadline: Optional[float] = None) -> RequestHandle:
+        """Enqueue one request; returns its streaming handle at once.
+
+        ``klass`` is the admission class (``"interactive"`` |
+        ``"batch"``; ``None`` defers to the engine default) and
+        ``deadline`` a per-request timeout in seconds from now — an
+        expired request is released wherever it is (queued, deferred, or
+        decoding) and resolves with ``finish_reason="deadline"``.  With
+        ``max_queued`` set, a full backlog raises
+        :class:`~repro.serve.policy.RejectedError` instead of queueing
+        unboundedly.
+        """
         if self._stop.is_set():
             raise RuntimeError("frontend is shut down")
+        if klass is not None and klass not in KLASSES:
+            raise ValueError(f"klass={klass!r} not in {KLASSES}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline={deadline} must be > 0 seconds")
         with self._mutex:
+            if self.max_queued is not None:
+                backlog = self._intake.qsize() + len(self._deferred)
+                if backlog >= self.max_queued:
+                    self.rejected += 1
+                    raise RejectedError(
+                        f"intake full ({backlog} >= max_queued="
+                        f"{self.max_queued})",
+                        retry_after=max(4 * self.idle_wait,
+                                        0.01 * backlog))
             if rid is None:
                 rid = self._next_rid
             self._next_rid = max(self._next_rid, rid) + 1
         handle = RequestHandle(rid, max_new_tokens, on_token)
+        handle._cancel_cb = self._file_cancel
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens,
-                      arrived=handle.submitted_at)
+                      arrived=handle.submitted_at, klass=klass,
+                      deadline=None if deadline is None
+                      else handle.submitted_at + deadline)
         with self._mutex:
             self._handles.append(handle)
         self.start()
         self._intake.put((req, handle))
         self._wake.set()
         return handle
+
+    def _file_cancel(self, rid: int) -> None:
+        """File a cancellation (any thread); the scheduler reaps it at
+        its next cycle."""
+        with self._mutex:
+            self._cancels.add(rid)
+        self._wake.set()
 
     def drain(self, timeout: Optional[float] = None) -> List[Completion]:
         """Block until every submitted request has completed; returns
@@ -275,39 +346,81 @@ class ServeFrontend:
 
     def _intake_flush(self) -> bool:
         """Admit arrivals up to the engine's free capacity, coalescing
-        same-bucket prompts into one batched prefill-insert each."""
+        same-bucket prompts into one batched prefill-insert each.
+
+        Interactive arrivals bypass the capacity cap — under saturation
+        they must reach the engine's queue, where the scheduling policy
+        admits them (preempting batch work if the pool is full); batch
+        arrivals beyond capacity defer to a later cycle.  Entries
+        cancelled or deadline-expired before admission resolve here
+        without ever touching the engine.
+        """
+        eng = self.engine
         with self._mutex:
             cap = self._free_capacity()
-        batch: List[Tuple[Request, RequestHandle]] = []
-        while len(batch) < cap:
+            pending = self._deferred
+            self._deferred = []
+            cancels = set(self._cancels)
+        while True:
             try:
-                batch.append(self._intake.get_nowait())
+                pending.append(self._intake.get_nowait())
             except queue.Empty:
                 break
-        if not batch:
+        if not pending:
             return False
-        with self._mutex:
-            for req, handle in batch:
-                self._tracked[req.rid] = [req, handle, 0]
-            eng = self.engine
-            if hasattr(eng, "prefill_batch"):
-                # Same-bucket arrivals prefill as one batched call; the
-                # rows park decode-ready in the engine's backfill queue
-                # and the next window admits them FIFO.
-                key = (lambda item: eng._bucket_len(len(item[0].prompt))
-                       or len(item[0].prompt))
-                ordered = sorted(batch, key=key)
-                eng.prefill_batch([req for req, _ in ordered])
-                self.coalesced_prefills += 1
+        policy = getattr(eng, "policy", None)
+        now = time.time()
+        admit: List[Tuple[Request, RequestHandle]] = []
+        defer: List[Tuple[Request, RequestHandle]] = []
+        resolved: List[Tuple[Request, RequestHandle, str]] = []
+        n_batch = 0
+        for req, handle in pending:
+            if req.klass is None:
+                # prefill_batch skips engine.submit(), so the engine
+                # default class is stamped here.
+                req.klass = getattr(eng, "default_klass", None)
+            if req.rid in cancels:
+                resolved.append((req, handle, FINISH_CANCELLED))
+            elif req.deadline is not None and now >= req.deadline:
+                resolved.append((req, handle, FINISH_DEADLINE))
+            elif policy is not None and policy.class_priority \
+                    and policy.is_interactive(req):
+                admit.append((req, handle))
+            elif n_batch < cap:
+                admit.append((req, handle))
+                n_batch += 1
             else:
-                for req, _ in batch:
-                    eng.submit(req)
-            # The engines' submit() stamps arrival at queue time;
-            # restore the true submission stamps.
-            for req, handle in batch:
-                req.arrived = handle.submitted_at
-            self._emit_new()
-        return True
+                defer.append((req, handle))
+        with self._mutex:
+            for req, handle, reason in resolved:
+                req.done = True
+                req.finish_reason = reason
+                self._cancels.discard(req.rid)
+                self._backlog.put((handle, _Done(req, reason=reason)))
+            self._deferred = defer + self._deferred
+            if admit:
+                for req, handle in admit:
+                    self._tracked[req.rid] = [req, handle, 0]
+                if hasattr(eng, "prefill_batch"):
+                    # Same-bucket arrivals prefill as one batched call;
+                    # the rows park decode-ready in the engine's
+                    # backfill queue and the next window admits them in
+                    # policy order.
+                    key = (lambda item:
+                           eng._bucket_len(len(item[0].prompt))
+                           or len(item[0].prompt))
+                    ordered = sorted(admit, key=key)
+                    eng.prefill_batch([req for req, _ in ordered])
+                    self.coalesced_prefills += 1
+                else:
+                    for req, _ in admit:
+                        eng.submit(req)
+                # The engines' submit() stamps arrival at queue time;
+                # restore the true submission stamps.
+                for req, handle in admit:
+                    req.arrived = handle.submitted_at
+                self._emit_new()
+        return bool(admit) or bool(resolved)
 
     def _emit_new(self) -> None:
         """Push every not-yet-emitted token to the backlog (called with
@@ -320,7 +433,88 @@ class ServeFrontend:
                 self._tracked[rid][2] = n + len(fresh)
             if req.done:
                 self._backlog.put((handle, _Done(req)))
+                self._cancels.discard(rid)
                 del self._tracked[rid]
+
+    def _reap(self) -> int:
+        """Resolve filed cancellations and expired deadlines for admitted
+        requests (mutex held): the engine releases the slot/pages, any
+        already-generated tokens flush, the handle resolves with the
+        lifecycle reason.  Pre-admission entries resolve at intake flush
+        instead.  Returns the number of requests reaped."""
+        now = time.time()
+        victims: List[Tuple[int, str]] = []
+        for rid, (req, _handle, _n) in self._tracked.items():
+            if rid in self._cancels:
+                victims.append((rid, FINISH_CANCELLED))
+            elif req.deadline is not None and now >= req.deadline:
+                victims.append((rid, FINISH_DEADLINE))
+        for rid, reason in victims:
+            req, handle, n = self._tracked.pop(rid)
+            self._cancels.discard(rid)
+            if hasattr(self.engine, "cancel"):
+                self.engine.cancel(rid)
+            req.done = True
+            req.finish_reason = reason
+            fresh = req.generated[n:]
+            if fresh:
+                self._backlog.put((handle, list(fresh)))
+            self._backlog.put((handle, _Done(req, reason=reason)))
+        return len(victims)
+
+    def _apply_faults(self) -> None:
+        """Fire this cycle's scheduled fault events (mutex held).  The
+        cursor makes each cycle's events one-shot: the fault clock only
+        advances on productive cycles, and idle scheduler spins must not
+        replay the current cycle's storm."""
+        if self.fault_plan is None or self._cycle == self._fault_cursor:
+            return
+        self._fault_cursor = self._cycle
+        for ev in self.fault_plan.events_at(self._cycle):
+            self._apply_fault(ev)
+
+    def _apply_fault(self, ev) -> None:
+        eng = self.engine
+        did = 0
+        if ev.kind == "exhaust_pages":
+            cache = getattr(eng, "cache", None)
+            if hasattr(cache, "seize_pages"):
+                seized = cache.seize_pages(ev.arg)
+                self._seized_pages.extend(seized)
+                did = len(seized)
+        elif ev.kind == "heal_pages":
+            cache = getattr(eng, "cache", None)
+            if self._seized_pages and hasattr(cache, "restore_pages"):
+                did = len(self._seized_pages)
+                cache.restore_pages(self._seized_pages)
+                self._seized_pages = []
+        elif ev.kind == "preempt":
+            if hasattr(eng, "preempt"):
+                did = eng.preempt(ev.arg)
+        elif ev.kind == "straggler":
+            # Surfaces at the next consumed window as an inflated step
+            # time fed to the watchdog (the PR-8 straggler path).
+            self._slow_next += 10.0 * ev.arg
+            did = ev.arg
+        elif ev.kind in ("cancel", "expire"):
+            if self._tracked:
+                rid = min(self._tracked)
+                if ev.kind == "cancel":
+                    self._cancels.add(rid)
+                else:
+                    self._tracked[rid][0].deadline = time.time()
+                did = 1
+        elif ev.kind == "raise_callback":
+            if self._tracked:
+                rid = min(self._tracked)
+                handle = self._tracked[rid][1]
+
+                def _boom(_tok, _rid=rid):
+                    raise RuntimeError(
+                        f"injected callback fault (rid {_rid})")
+                handle._on_token = _boom
+                did = 1
+        self.fault_log.append((self._cycle, ev.kind, did))
 
     def _scheduler(self) -> None:
         finished: List[Request] = []
@@ -329,11 +523,15 @@ class ServeFrontend:
                 break
             moved = self._intake_flush()
             with self._mutex:
+                self._apply_faults()
+                reaped = self._reap()
                 self._check_devices()
                 t0 = time.perf_counter()
                 consumed = self.engine.step(finished)
                 dt = time.perf_counter() - t0
                 if self.watchdog is not None and consumed:
+                    dt += self._slow_next
+                    self._slow_next = 0.0
                     if self.watchdog.observe(self._step_idx, dt):
                         # A stalled window is how a lost shard shows up
                         # from inside the host loop — re-probe at once.
@@ -341,14 +539,36 @@ class ServeFrontend:
                     self._step_idx += 1
                 self._emit_new()
                 finished.clear()
+                if consumed or moved or reaped:
+                    # The fault clock ticks on productive cycles only,
+                    # so a plan replays identically regardless of how
+                    # long the scheduler idles between work.
+                    self._cycle += 1
             if self._stop.is_set() and not consumed and not moved \
-                    and self._intake.empty():
+                    and not reaped and self._intake.empty() \
+                    and not self._deferred:
                 break
-            if not moved and not consumed:
+            if not moved and not consumed and not reaped:
                 self._wake.wait(self.idle_wait)
                 self._wake.clear()
+        with self._mutex:
+            self._heal_seized()
         if self._abort.is_set():
             self._abort_inflight()
+
+    def _heal_seized(self) -> None:
+        """Return any still-seized pages at scheduler exit (mutex held):
+        the injector ghosts pool capacity, it never leaks it — a plan
+        whose ``heal_pages`` cycle was never reached must not leave the
+        pool short after shutdown."""
+        if not self._seized_pages:
+            return
+        cache = getattr(self.engine, "cache", None)
+        if hasattr(cache, "restore_pages"):
+            self.fault_log.append(
+                (self._cycle, "heal_pages", len(self._seized_pages)))
+            cache.restore_pages(self._seized_pages)
+            self._seized_pages = []
 
     # -- fault recovery --------------------------------------------------
     def _check_devices(self) -> None:
@@ -397,6 +617,9 @@ class ServeFrontend:
         with self._mutex:
             leftovers = list(self._tracked.values())
             self._tracked.clear()
+            leftovers.extend([req, handle, 0]
+                             for req, handle in self._deferred)
+            self._deferred = []
             while True:
                 try:
                     req, handle = self._intake.get_nowait()
@@ -427,12 +650,10 @@ class ServeFrontend:
         n = len(req.generated)
         first = handle.first_emitted_at or handle.submitted_at
         now = time.time()
-        if done.aborted:
-            reason = FINISH_ABORTED
-        elif n >= req.max_new_tokens:
-            reason = FINISH_LENGTH
-        else:
-            reason = FINISH_MAX_SEQ
+        reason = done.reason or getattr(req, "finish_reason", None)
+        if reason is None:
+            reason = (FINISH_LENGTH if n >= req.max_new_tokens
+                      else FINISH_MAX_SEQ)
         return Completion(
             rid=req.rid, tokens=tuple(req.generated),
             ttft=max(0.0, first - handle.submitted_at),
@@ -457,6 +678,12 @@ class ServeFrontend:
                 "inflight": len(self._handles) - len(comps),
                 "coalesced_prefills": self.coalesced_prefills,
                 "remeshes": self.remeshes,
+                "rejected": self.rejected,
+                "deferred": len(self._deferred),
+                "faults": len(self.fault_log),
+                "finish_reasons": {
+                    r: sum(1 for c in comps if c.finish_reason == r)
+                    for r in sorted({c.finish_reason for c in comps})},
                 "stragglers": (len(self.watchdog.flagged)
                                if self.watchdog is not None else 0),
                 "ttft": [c.ttft for c in comps],

@@ -81,7 +81,7 @@ import numpy as np
 from repro.configs.base import ATTN, ModelConfig
 from repro.kernels.paged_attn import quantize_page_pool
 from repro.models.attention import CACHE_QUANT
-from repro.serve.engine import Request
+from repro.serve.engine import effective_tokens, Request
 from repro.serve.serve_step import make_paged_decode_step
 from repro.serve.slot_engine import SlotServeEngine
 
@@ -459,6 +459,27 @@ class PagedKVCache:
         self._free_slots.sort(reverse=True)
         return freed
 
+    def seize_pages(self, n: int) -> List[int]:
+        """Fault injection: pull up to ``n`` free pages out of
+        circulation, holding them under a ghost reservation so
+        ``can_reserve``/``_admit_cap`` see real pool pressure and the
+        free-list underflow-safety invariant holds (the seizure is
+        bounded by the *unreserved* headroom, never just the free
+        count).  Returns the seized pages; :meth:`restore_pages`
+        reverses the fault."""
+        headroom = self.num_pages - self.reserved_total - self._orphaned
+        take = max(0, min(n, headroom, len(self._free_pages)))
+        seized = [self._free_pages.pop() for _ in range(take)]
+        self.reserved_total += take
+        return seized
+
+    def restore_pages(self, pages: Sequence[int]) -> None:
+        """Heal a :meth:`seize_pages` fault: drop the ghost reservation
+        and return the pages to the free list."""
+        self._free_pages.extend(pages)
+        self._free_pages.sort(reverse=True)
+        self.reserved_total -= len(pages)
+
     def reset(self) -> None:
         """Free every slot and page; pool buffers (and stale content —
         never attended, admission re-maps pages) are kept."""
@@ -598,11 +619,16 @@ class PagedServeEngine(SlotServeEngine):
 
     # -- page accounting ------------------------------------------------
     def _pages_for(self, req: Request) -> int:
-        """Worst-case pages for ``req``: padded prompt plus its full
-        decode budget, clamped to the engine's ``max_seq`` stop rule."""
-        s = len(req.prompt)
+        """Worst-case pages for ``req``: padded (effective) prompt plus
+        its remaining decode budget, clamped to the ``max_seq`` stop
+        rule.  For a preempted request the effective prompt has grown by
+        its generated tokens while the remaining budget shrank equally,
+        so resume reserves exactly the fresh-admission worst case —
+        re-admission can never over-commit the pool."""
+        k = len(req.generated)
+        s = len(req.prompt) + max(k - 1, 0)
         blen = self._bucket_len(s)
-        budget = max(1, req.max_new_tokens - 1)
+        budget = max(1, req.max_new_tokens - max(k, 1))
         last = min(max(blen - 1, s + budget - 1), self.max_seq - 1)
         return last // self.page_size + 1
 
@@ -610,10 +636,12 @@ class PagedServeEngine(SlotServeEngine):
         """Walk the prefix registry: physical pages for the longest
         chain of ``req``'s page-aligned token prefixes already resident.
         Causality makes page content a pure function of the token
-        prefix through the page, so a registry hit is a content hit."""
+        prefix through the page, so a registry hit is a content hit —
+        including for a resume's effective prompt, whose generated tail
+        was itself written from those very prefixes."""
         if not self.prefix_sharing:
             return []
-        toks = np.asarray(req.prompt, np.int32)
+        toks = effective_tokens(req)
         shared: List[int] = []
         for j in range(len(toks) // self.page_size):
             key = toks[:(j + 1) * self.page_size].tobytes()
@@ -671,7 +699,7 @@ class PagedServeEngine(SlotServeEngine):
             # keys always form prefix chains: a page-j key can only
             # outlive its page-(j-1) key if some holder maps page j
             # without page j-1, which chains never do).
-            toks = np.asarray(req.prompt, np.int32)
+            toks = effective_tokens(req)
             pages = self.cache.mapped_pages(slot)
             for j in range(len(toks) // self.page_size):
                 key = toks[:(j + 1) * self.page_size].tobytes()

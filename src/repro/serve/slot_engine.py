@@ -64,10 +64,11 @@ import numpy as np
 
 from repro.configs.base import ATTN, LOCAL, ModelConfig
 from repro.distributed.sharding import (cache_specs, param_specs, to_named)
-from repro.serve.api import completion_of, Completion
-from repro.serve.engine import (choose_decode_batch, init_serve_stats,
+from repro.serve.api import completion_of, Completion, FINISH_CANCELLED
+from repro.serve.engine import (effective_tokens, init_serve_stats,
                                 note_first_token, record_step_packing,
                                 Request, SLAB_LADDER)
+from repro.serve.policy import KLASS_BATCH, SchedulingPolicy
 from repro.serve.serve_step import (make_bucketed_prefill_step,
                                     make_decode_step)
 
@@ -184,9 +185,12 @@ class SlotServeEngine:
                  prefill_is_bucketed: Optional[bool] = None,
                  expert_backend: Optional[str] = None,
                  coexec_backend: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, policy: Optional[SchedulingPolicy] = None,
+                 default_klass: str = KLASS_BATCH):
         del cache_init_fn  # slot buffers are shaped from the first prefill
         self.cfg = cfg
+        self.policy = policy or SchedulingPolicy()
+        self.default_klass = default_klass
         if mesh is not None and (prefill_fn is not None
                                  or decode_fn is not None):
             raise ValueError(
@@ -262,6 +266,10 @@ class SlotServeEngine:
 
         self.queue: Deque[Request] = deque()
         self._backfilled: Deque[Tuple[Request, Any, int]] = deque()
+        # Cancelled mid-flight, awaiting delivery via the next step()'s
+        # ``finished`` list (keeps run()'s one-completion-per-request
+        # contract across cancellations).
+        self._cancelled: List[Request] = []
 
     # Subclass hooks (the paged engine swaps storage + decode step but
     # keeps the ladder/window/admission policy).
@@ -274,6 +282,7 @@ class SlotServeEngine:
             "prefill_bucket_hits": 0, "prefill_bucket_misses": 0,
             "prefill_batches": 0, "prefill_batched_reqs": 0,
             "slot_admits": 0, "slot_releases": 0,
+            "preemptions": 0, "cancelled": 0,
             "remeshes": 0,
         }
 
@@ -328,6 +337,7 @@ class SlotServeEngine:
         """
         self.queue.clear()
         self._backfilled.clear()
+        self._cancelled.clear()
         self._req = [None] * self.max_batch
         self._tok[:] = 0
         self._pos[:] = 0
@@ -445,9 +455,12 @@ class SlotServeEngine:
     # Prefill (bucketed) + admission
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        """Enqueue a request for admission."""
+        """Enqueue a request in admission-class order (interactive ahead
+        of the first batch entry; FIFO within each class)."""
         req.arrived = time.time()
-        self.queue.append(req)
+        if req.klass is None:
+            req.klass = self.default_klass
+        self.policy.enqueue(self.queue, req)
 
     def _bucket_len(self, s: int) -> Optional[int]:
         b = _MIN_BUCKET
@@ -456,7 +469,14 @@ class SlotServeEngine:
         return b if b <= self._bucket_cap else None
 
     def _prefill_one(self, req: Request):
-        s = len(req.prompt)
+        # A preempted request resumes by re-prefilling every token it
+        # ever wrote (prompt + generated[:-1]) and re-entering decode at
+        # the released position — token-identical to an unpreempted
+        # serve (see repro.serve.engine.effective_tokens).  The first
+        # token was already sampled and stamped, so resume skips both.
+        toks = effective_tokens(req)
+        resume = bool(req.generated)
+        s = len(toks)
         if self._bucket_enabled:
             b = self._bucket_len(s)
             if b is not None:
@@ -466,20 +486,21 @@ class SlotServeEngine:
                     self._seen_buckets.add(b)
                     self.stats["engine"]["prefill_bucket_misses"] += 1
                 padded = np.zeros(b, np.int32)
-                padded[:s] = req.prompt
+                padded[:s] = toks
                 tokens = padded[None]
             else:
                 # Bucket would overflow a cache capacity: exact length.
                 self.stats["engine"]["prefill_bucket_misses"] += 1
-                tokens = np.asarray(req.prompt[None], np.int32)
+                tokens = np.asarray(toks[None], np.int32)
             batch = {"tokens": jnp.asarray(tokens),
                      "last_index": jnp.int32(s - 1)}
         else:
-            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            batch = {"tokens": jnp.asarray(toks[None], jnp.int32)}
             if self._prefill_needs_index:
                 batch["last_index"] = jnp.int32(s - 1)
         logits, cache = self.prefill_fn(self.params, batch)
-        note_first_token(req, logits, self.cfg.vocab_size, self.stats)
+        if not resume:
+            note_first_token(req, logits, self.cfg.vocab_size, self.stats)
         return cache, s
 
     def _backfill_one(self, req: Request) -> None:
@@ -516,24 +537,43 @@ class SlotServeEngine:
         Backfilled requests are admitted first (their prefill already
         ran — re-running it would double-book its GEMMs against the
         ladder), then fresh queue requests are prefilled into slots.
+        With ``class_priority`` an interactive head is admitted even
+        past the ladder target (up to ``max_batch``), and with
+        ``preemption`` a storage-blocked interactive admission evicts a
+        batch-class resident (:meth:`_preempt_slot`) instead of
+        stalling behind the pool — ``_admit_cap`` exhaustion degrades
+        gracefully rather than walling off interactive traffic.
         """
-        n_live = self._n_active() + len(self.queue) + len(self._backfilled)
+        waiting = [r for r, _, _ in self._backfilled] + list(self.queue)
+        n_live = self._n_active() + len(waiting)
         if n_live == 0:
             return
-        target = choose_decode_batch(n_live, self.cfg, self.max_batch,
-                                     admit_cap=self._admit_cap())
-        target = max(1, min(target or 1, self.max_batch))
+        n_inter = sum(1 for r in waiting if self.policy.is_interactive(r))
+        target = self.policy.ladder_target(
+            n_live, n_inter, self.cfg, self.max_batch,
+            admit_cap=self._admit_cap())
         self.stats["batches"].append(min(target, n_live))
-        while (self._n_active() < target and self.cache.n_free
-               and (self._backfilled or self.queue)):
-            head = (self._backfilled[0][0] if self._backfilled
-                    else self.queue[0])
-            if not self._can_admit(head):
+        # Termination: every pass either admits (shrinks the waiting
+        # set) or preempts (shrinks the batch-class residents), both
+        # finite; the guard is a belt against invariant bugs only.
+        guard = 2 * (self.max_batch + n_live) + 4
+        while (self._backfilled or self.queue) and guard > 0:
+            guard -= 1
+            src, idx, head = self._next_candidate()
+            boost = (self.policy.class_priority
+                     and self.policy.is_interactive(head))
+            if self._n_active() >= (self.max_batch if boost else target):
                 break
-            if self._backfilled:
-                req, cache, pos = self._backfilled.popleft()
+            if not self.cache.n_free or not self._can_admit(head):
+                if not (boost and self._preempt_for(head)):
+                    break
+                continue
+            if src == "backfilled":
+                req, cache, pos = self._backfilled[idx]
+                del self._backfilled[idx]
             else:
-                req = self.queue.popleft()
+                req = self.queue[idx]
+                del self.queue[idx]
                 cache, pos = self._prefill_one(req)
             slot = self.cache.acquire()
             self._store_cache(req, cache, slot)
@@ -546,6 +586,105 @@ class SlotServeEngine:
             self._budget[slot] = max(1, req.max_new_tokens
                                      - len(req.generated))
             self.stats["engine"]["slot_admits"] += 1
+
+    def _next_candidate(self):
+        """Admission candidate in policy order: the first interactive
+        entry anywhere (backfilled ahead of queued — its prefill already
+        ran), else the backfilled head, else the queue head.  Without
+        this, one pool-blocked batch head at the backfill front would
+        wall off every interactive arrival behind it — the exact stall
+        the policy layer exists to remove."""
+        if self.policy.class_priority:
+            for i, (r, _c, _p) in enumerate(self._backfilled):
+                if self.policy.is_interactive(r):
+                    return "backfilled", i, r
+            for i, r in enumerate(self.queue):
+                if self.policy.is_interactive(r):
+                    return "queue", i, r
+        if self._backfilled:
+            return "backfilled", 0, self._backfilled[0][0]
+        return "queue", 0, self.queue[0]
+
+    # ------------------------------------------------------------------
+    # Preemption + cancellation (overload robustness)
+    # ------------------------------------------------------------------
+    def _preempt_for(self, head: Request) -> bool:
+        """Evict one batch-class resident to unblock ``head``'s
+        admission; returns True iff a victim was preempted."""
+        if not self.policy.preemption:
+            return False
+        resident = [(s, r) for s, r in enumerate(self._req)
+                    if r is not None]
+        victim = self.policy.choose_victim(resident)
+        if victim is None:
+            return False
+        self._preempt_slot(*victim)
+        return True
+
+    def _preempt_slot(self, slot: int, req: Request) -> None:
+        """Release ``slot``'s storage and requeue its request for a
+        deterministic resume: the re-admit prefills
+        ``prompt + generated[:-1]`` and decodes on, token-identical to
+        an unpreempted serve (pinned in the differential harness)."""
+        self._req[slot] = None
+        self._budget[slot] = 0
+        self._release_slot(slot)
+        self.stats["engine"]["slot_releases"] += 1
+        self.stats["engine"]["preemptions"] += 1
+        req.preemptions += 1
+        self.policy.requeue(self.queue, req)
+
+    def preempt(self, n: int = 1) -> int:
+        """Forcibly evict up to ``n`` residents (the fault-injection
+        storm): policy victim choice first, then — the policy only ever
+        names batch-class victims — any remaining resident by lowest
+        progress.  Returns the number actually preempted."""
+        count = 0
+        for _ in range(n):
+            resident = [(s, r) for s, r in enumerate(self._req)
+                        if r is not None]
+            victim = self.policy.choose_victim(resident)
+            if victim is None and resident:
+                victim = min(resident,
+                             key=lambda sr: (len(sr[1].generated), -sr[0]))
+            if victim is None:
+                break
+            self._preempt_slot(*victim)
+            count += 1
+        return count
+
+    def cancel(self, rid: int) -> bool:
+        """Release a request mid-flight.  A resident request frees its
+        slot (and, on the paged engine, its pages) immediately — a
+        waiting admission can proceed this very step; queued/backfilled
+        entries are dropped.  Marks the request done with
+        ``finish_reason="cancelled"``; returns True iff found."""
+        for slot, req in enumerate(self._req):
+            if req is not None and req.rid == rid:
+                self._req[slot] = None
+                self._budget[slot] = 0
+                self._release_slot(slot)
+                self.stats["engine"]["slot_releases"] += 1
+                break
+        else:
+            for item in list(self._backfilled):
+                if item[0].rid == rid:
+                    self._backfilled.remove(item)
+                    req = item[0]
+                    break
+            else:
+                for req in list(self.queue):
+                    if req.rid == rid:
+                        self.queue.remove(req)
+                        break
+                else:
+                    return False
+        req.done = True
+        req.finish_reason = FINISH_CANCELLED
+        req.finished_at = time.time()
+        self._cancelled.append(req)
+        self.stats["engine"]["cancelled"] += 1
+        return True
 
     def _current_rung(self) -> int:
         highest = max((i + 1 for i, r in enumerate(self._req)
@@ -620,6 +759,9 @@ class SlotServeEngine:
         between two calls the engine state is at a window boundary, so
         the frontend can inject batched prefills and read fresh tokens.
         """
+        if self._cancelled:
+            finished.extend(self._cancelled)
+            self._cancelled.clear()
         if not (self.queue or self._backfilled or self._n_active()) \
                 or max_steps <= 0:
             return 0
@@ -653,6 +795,8 @@ class SlotServeEngine:
         while ((self.queue or self._backfilled or self._n_active())
                and max_steps > 0):
             max_steps -= self.step(finished, max_steps)
+        finished.extend(self._cancelled)   # cancelled with no step after
+        self._cancelled.clear()
         return [completion_of(r) for r in finished]
 
     # ------------------------------------------------------------------

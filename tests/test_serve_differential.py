@@ -213,6 +213,53 @@ class TestCoexecInvariance:
             _check_serve_stats(engines[co], got, workload)
 
 
+class TestPreemptionIdentity:
+    """PR 9's overload machinery must be token-invisible: admission
+    classes reorder work and forced evictions resume via re-prefill of
+    ``prompt + generated[:-1]``, but the streams must equal the
+    reference serve bit-for-bit, with the slot accounting reconciled
+    (every preemption is one extra admit/release pair)."""
+
+    @given(workload=WORKLOADS, seed=SEEDS,
+           inter=st.lists(st.booleans(), min_size=6, max_size=6),
+           storm=st.lists(st.tuples(st.integers(1, 10), st.integers(1, 2)),
+                          min_size=0, max_size=3))
+    def test_mixed_classes_and_storms_token_invisible(
+            self, engines, setup, workload, seed, inter, storm):
+        cfg, _ = setup
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _serve(engines[REFERENCE], workload, prompts)
+        eng = engines["paged_small"]
+        eng.reset()
+        for rid, ((_, budget), prompt) in enumerate(zip(workload,
+                                                        prompts)):
+            eng.submit(Request(
+                rid=rid, prompt=prompt, max_new_tokens=budget,
+                klass="interactive" if inter[rid] else "batch"))
+        storms: dict = {}
+        for at, n in storm:
+            storms[at] = storms.get(at, 0) + n
+        fin, steps = [], 0
+        while eng.step(fin) and steps < 4096:
+            steps += 1
+            if steps in storms:
+                eng.preempt(storms[steps])
+        got = {r.rid: tuple(r.generated) for r in fin}
+        assert got == want
+        ext = eng.stats["engine"]
+        # Reconciliation: preemptions show up as extra admit/release
+        # pairs, never as lost or duplicated requests.
+        assert ext["slot_admits"] == len(workload) + ext["preemptions"]
+        assert ext["slot_admits"] == ext["slot_releases"]
+        assert (ext["page_admits"] + ext["pages_shared"]
+                >= len(workload) + ext["preemptions"])
+        assert eng.cache.n_free == eng.max_batch
+        assert eng.cache.n_free_pages == eng.cache.num_pages
+        assert eng.cache.reserved_total == 0
+        assert eng.cache.orphaned_pages == 0
+        validate_stats(eng.stats)
+
+
 class TestSharedPrefix:
     """Same system prompt, divergent continuations: prefix sharing must
     dedup physical pages without touching a single token."""
