@@ -33,6 +33,7 @@ def main() -> None:
     from benchmarks.kernel_bench import bench_grouped_kernels, bench_kernels
     from benchmarks.multi_tenant_bench import bench_multi_tenant
     from benchmarks.serve_bench import (bench_serving,
+                                        bench_serving_archs,
                                         bench_serving_frontend,
                                         bench_serving_paged,
                                         bench_serving_sharded,
@@ -44,7 +45,8 @@ def main() -> None:
                bench_fig7_casestudy, bench_kernels, bench_grouped_kernels,
                bench_slab_ablation, bench_multi_tenant, bench_serving,
                bench_serving_paged, bench_serving_frontend,
-               bench_serving_slo, bench_serving_sharded]
+               bench_serving_slo, bench_serving_sharded,
+               bench_serving_archs]
     if args.quick:
         # CI smoke: the analytic benches are already fast; skip the slow
         # interpret-mode kernel sweep and shrink the packing/grouped
@@ -57,7 +59,8 @@ def main() -> None:
                    functools.partial(bench_serving_paged, quick=True),
                    functools.partial(bench_serving_frontend, quick=True),
                    functools.partial(bench_serving_slo, quick=True),
-                   functools.partial(bench_serving_sharded, quick=True)]
+                   functools.partial(bench_serving_sharded, quick=True),
+                   functools.partial(bench_serving_archs, quick=True)]
 
     def _name(b) -> str:
         fn = b.func if isinstance(b, functools.partial) else b

@@ -74,6 +74,17 @@ HARD_MAX_US = {
     # scheduling policy must strictly beat the FIFO baseline on the
     # same workload, or preemption is dead weight (ISSUE 9).
     "serve_slo_ttft_gain": 1_000.0,
+    # windowed-ring over full-length-paged resident-KV-byte ratio x
+    # 1000 on gemma3 (5 of 6 layers sliding-window): local layers must
+    # stay priced at one window ring per slot, not max_pages_per_slot
+    # pages — regressing to full-length local paging pushes this toward
+    # 1000 (ISSUE 10 acceptance bound).
+    "serve_window_kv_bytes": 600.0,
+    # decode compiles after warmup summed across the windowed,
+    # recurrent, and enc-dec paged engines x 10_000: serving *every*
+    # registry family keeps the zero-steady-state-compile invariant
+    # (ISSUE 10 acceptance bound — zero).
+    "serve_arch_warm_compiles": 0.0,
 }
 
 # Rows whose regression story is carried by a *same-run* comparison (a

@@ -43,6 +43,7 @@ class ModelConfig:
     enc_dec: bool = False
     n_enc_layers: int = 0
     dec_max_len: int = 448           # decoder structural max (whisper)
+    enc_frames: int = 0              # fixed encoder source length (frames)
     # modality frontend stubs
     frontend: Optional[str] = None   # None | "vision" | "audio"
     frontend_dim: int = 0            # embedding dim the stub provides

@@ -73,6 +73,7 @@ WHISPER_BASE = _register(ModelConfig(
     name="whisper-base", family="audio", n_layers=6, d_model=512,
     n_heads=8, n_kv_heads=8, head_dim=64, d_ff=2048, vocab_size=51865,
     layer_pattern=(ATTN,), enc_dec=True, n_enc_layers=6, dec_max_len=448,
+    enc_frames=1500,                        # 30s x 50 frames/s post-conv
     gated_mlp=False, act="gelu", use_bias=True, tie_embeddings=True,
     frontend="audio", frontend_dim=80,      # mel bins (conv stack stubbed)
     source="arXiv:2212.04356"))
@@ -154,6 +155,8 @@ def smoke_config(name: str) -> ModelConfig:
         moe=moe,
         n_enc_layers=min(cfg.n_enc_layers, 2),
         dec_max_len=min(cfg.dec_max_len, 32),
+        # deliberately not page-aligned so paged cross-KV pad paths run
+        enc_frames=min(cfg.enc_frames, 12),
         frontend_dim=16 if cfg.frontend else 0,
         param_dtype="float32",
     )

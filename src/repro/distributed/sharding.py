@@ -205,7 +205,9 @@ def to_named(tree_specs: PyTree, mesh: Mesh) -> PyTree:
 # --------------------------------------------------------------------------
 # Serving-cache specs (slot buffers, paged page pools, recurrent states)
 # --------------------------------------------------------------------------
-_POOL_LEAVES = ("pk", "pv", "pk_s", "pv_s")
+_POOL_LEAVES = ("pk", "pv", "pk_s", "pv_s",   # global page pool
+                "lk", "lv",                    # sliding-window ring pool
+                "ck", "cv")                    # enc-dec cross pool
 
 
 def cache_specs(cache_shapes: PyTree, cfg, mesh: Mesh, *,
@@ -216,11 +218,13 @@ def cache_specs(cache_shapes: PyTree, cfg, mesh: Mesh, *,
     leaf *name* (the paged pool and the dense slot cache are both 5-dim,
     so shape alone cannot distinguish them):
 
-    * ``pk``/``pv`` (+ ``pk_s``/``pv_s`` int8 scale planes) — paged page
-      pool ``(L, pages+1, psz, Hkv, hd|1)``: the page axis is **never**
-      sharded (the page table indexes physical pages globally, so every
-      shard must see every page row); K/V heads go tensor-parallel over
-      ``model`` when divisible, else the page interior seq-shards.
+    * ``pk``/``pv`` (+ ``pk_s``/``pv_s`` int8 scale planes), ``lk``/``lv``
+      (sliding-window ring pool) and ``ck``/``cv`` (enc-dec cross pool) —
+      paged pools ``(L, pages+1, psz, Hkv, hd|1)``: the page axis is
+      **never** sharded (the page tables index physical pages globally,
+      so every shard must see every page row); K/V heads go
+      tensor-parallel over ``model`` when divisible, else the page
+      interior seq-shards.
     * ``k``/``v`` (+ scales) — dense slot cache ``(L, B, cap, Hkv,
       hd|1)``: batch over ``batch_axes`` and heads over ``model`` when
       divisible, else the sequence axis shards (long-context fallback).
@@ -263,6 +267,13 @@ def cache_specs(cache_shapes: PyTree, cfg, mesh: Mesh, *,
             else:
                 spec = _canon((None, None, _fit(mesh, shape[2], M), None,
                                None))
+        elif name == "state" and nd == 5:
+            # WKV state — dense (L, B, H, hd, hd) or paged slab
+            # (L, slots, H, hd, hd): heads live on axis 2 (not axis 3
+            # like attention caches), so the generic 5-dim rule would
+            # split the hd x hd outer product instead of the heads.
+            spec = _canon((None, _fit(mesh, shape[1], B),
+                           _fit(mesh, shape[2], M), None, None))
         elif nd == 5:
             b = _fit(mesh, shape[1], B)
             if head_ok:

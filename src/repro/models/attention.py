@@ -260,9 +260,22 @@ def init_cache(batch: int, cap: int, n_kv_heads: int, head_dim: int,
 
 
 def prefill_into_cache(p, x: Array, cfg, *, kind: str, cap: int,
+                       last_index: Optional[Array] = None,
                        sharder: Sharder = IDENTITY_SHARDER
                        ) -> Dict[str, Array]:
-    """Compute post-RoPE K/V for a full prompt and lay it into a cache."""
+    """Compute post-RoPE K/V for a full prompt and lay it into a cache.
+
+    ``last_index`` (scalar or (B,), traced) is the index of each row's
+    real last token when ``x`` is right-padded to a bucket length.  It
+    only matters for the ``s > cap`` ring layout: the static roll places
+    the last ``cap`` of the *padded* sequence, which is wrong when pads
+    trail the prompt.  With ``last_index`` the ring is laid per row by
+    gather — cell ``j`` takes position ``last - ((last - j) mod cap)``,
+    the unique position in ``(last - cap, last]`` congruent to ``j`` —
+    which reduces to the identity layout for rows shorter than ``cap``
+    (cells beyond the row's length are zeroed; the decode-time ring mask
+    already invalidates them).
+    """
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
     k = _split_heads(linear_apply(p["k"], x), cfg.n_kv_heads)
@@ -272,6 +285,14 @@ def prefill_into_cache(p, x: Array, cfg, *, kind: str, cap: int,
         pad = cap - s
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    elif last_index is not None:     # ring layout at the rows' real lengths
+        last = jnp.asarray(last_index)
+        last = last[:, None] if last.ndim == 1 else jnp.full((b, 1), last)
+        src = last - jnp.mod(last - jnp.arange(cap)[None, :], cap)  # (B,cap)
+        valid = (src >= 0)[:, :, None, None]
+        idx = jnp.clip(src, 0, s - 1)[:, :, None, None]
+        k = jnp.where(valid, jnp.take_along_axis(k, idx, axis=1), 0)
+        v = jnp.where(valid, jnp.take_along_axis(v, idx, axis=1), 0)
     else:                            # ring buffer: keep the last cap, rolled
         k, v = k[:, -cap:], v[:, -cap:]
         shift = s % cap
@@ -458,6 +479,94 @@ def paged_attn_decode_step(p, x: Array, cache: Dict[str, Array],
                                   impl=impl)[:, None]  # (B, 1, H, hd)
     out = out.reshape(b, 1, cfg.n_heads * hd)
     return linear_apply(p["o"], out), new_cache
+
+
+def paged_local_attn_decode_step(p, x: Array, cache: Dict[str, Array],
+                                 page_table: Array, pos: Array, cfg, *,
+                                 window_cap: int,
+                                 sharder: Sharder = IDENTITY_SHARDER
+                                 ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token sliding-window step against a paged ring of blocks.
+
+    ``cache`` holds this layer's slice of the *local* page pool
+    ``{"lk": (n_lpages, page_size, Hkv, hd), "lv": ...}`` and
+    ``page_table`` is the per-row ring table ``(B, R) int32``: the page
+    holding sequence block ``q`` of row ``i`` is
+    ``page_table[i, q mod R]``.  ``R`` is sized by the engine so that
+    ``R * page_size >= window_cap + decode_window + page_size`` — the
+    engine swaps a ring column's physical page (freeing the old one back
+    to the pool) only for blocks the upcoming decode window will enter,
+    and at that point the overwritten content is at least ``window_cap``
+    positions behind every read in the window, i.e. already masked.
+
+    ``window_cap`` is the dense engine's ring capacity
+    ``min(sliding_window, max_seq)``: the read path gathers cell ``j``
+    of the *logical* ring (position ``pos - ((pos - j) mod window_cap)``,
+    masked when negative) through the ring table, reproducing the dense
+    :func:`attn_decode_step` gather order and mask bit for bit.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    psz = cache["lk"].shape[1]
+    ring = page_table.shape[1]
+    pos = jnp.asarray(pos)
+    assert pos.ndim == 1, "paged decode requires per-row (B,) positions"
+    positions = pos[:, None]
+    q = _split_heads(linear_apply(p["q"], x), cfg.n_heads)
+    k = _split_heads(linear_apply(p["k"], x), cfg.n_kv_heads)
+    v = _split_heads(linear_apply(p["v"], x), cfg.n_kv_heads)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b)
+    phys = page_table[rows, (pos // psz) % ring]
+    off = pos % psz
+    lk = cache["lk"].at[phys, off].set(k[:, 0])
+    lv = cache["lv"].at[phys, off].set(v[:, 0])
+    lk = sharder.constrain(lk, "kv_cache")
+    lv = sharder.constrain(lv, "kv_cache")
+    new_cache = {"lk": lk, "lv": lv}
+    # Logical ring cell j holds position pos - ((pos - j) mod window_cap);
+    # gather it back through the ring table (same cell order and validity
+    # mask as the dense ring, so SDPA sees identical operands).
+    j = jnp.arange(window_cap)
+    logical = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], window_cap)
+    valid = logical >= 0
+    pc = jnp.maximum(logical, 0)
+    pages = page_table[rows[:, None], (pc // psz) % ring]    # (B, w)
+    kd = lk[pages, pc % psz]                                 # (B, w, Hkv, hd)
+    vd = lv[pages, pc % psz]
+    mask = valid[:, None, None, :]
+    kk = _repeat_kv(kd, cfg.n_heads // cfg.n_kv_heads)
+    vv = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
+    out = _sdpa(q, kk, vv, mask, sharder)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return linear_apply(p["o"], out), new_cache
+
+
+def paged_cross_attn_decode(p, x: Array, cache: Dict[str, Array],
+                            page_table: Array, cfg, *, enc_len: int,
+                            sharder: Sharder = IDENTITY_SHARDER) -> Array:
+    """Decoder cross-attention against paged, read-only encoder KV.
+
+    ``cache`` is the cross pool slice ``{"ck": (n_cpages, page_size,
+    Hkv, hd), "cv": ...}`` and ``page_table`` the per-row ``(B, C)``
+    table written once at admit (refcount-shared between requests with
+    identical encoder features).  The gathered view is sliced back to
+    the static ``enc_len`` before SDPA — cross attention carries no mask
+    (every encoder frame is visible), so page-padding cells must not
+    reach the softmax.  Operands match :func:`cross_attn_decode` on the
+    dense encoder KV bit for bit.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = _split_heads(linear_apply(p["q"], x), cfg.n_heads)
+    kd = cache["ck"][page_table].reshape(b, -1, cfg.n_kv_heads, hd)
+    vd = cache["cv"][page_table].reshape(b, -1, cfg.n_kv_heads, hd)
+    kd, vd = kd[:, :enc_len], vd[:, :enc_len]
+    k = _repeat_kv(kd, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(vd, cfg.n_heads // cfg.n_kv_heads)
+    out = _sdpa(q, k, v, None, sharder)
+    return linear_apply(p["o"], out.reshape(b, x.shape[1], cfg.n_heads * hd))
 
 
 def cross_attn_decode(p, x: Array, cross_kv: Dict[str, Array], cfg,

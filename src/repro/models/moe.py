@@ -46,9 +46,34 @@ def _capacity(n_tokens: int, n_experts: int, top_k: int,
     return max(8, ((cap + 7) // 8) * 8)          # sublane-aligned
 
 
+def _dynamic_capacity(n_real, n_static: int, cfg) -> Array:
+    """Capacity threshold for a *traced* real-token count.
+
+    Bucketed prefill routes a right-padded (static ``n_static``-token)
+    batch but must drop exactly the tokens an exact-length prefill
+    would, i.e. apply ``_capacity(n_real)``.  ``math.ceil`` on floats is
+    not safely reproducible inside a trace, so precompute the exact
+    table over every possible real count and gather.
+    """
+    moe_cfg = cfg.moe
+    table = jnp.asarray(
+        [_capacity(i, moe_cfg.n_experts, moe_cfg.top_k,
+                   moe_cfg.capacity_factor)
+         for i in range(n_static + 1)], jnp.int32)
+    return table[jnp.clip(n_real, 0, n_static)]
+
+
 def _moe_local(x: Array, p, cfg, act: str, e_offset: int, e_local: int,
-               model_axis: Optional[str]) -> Tuple[Array, Array]:
-    """Per-shard MoE. x: (B_loc, S, d) replicated over the model axis."""
+               model_axis: Optional[str],
+               valid: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Per-shard MoE. x: (B_loc, S, d) replicated over the model axis.
+
+    ``valid`` (B_loc, S) bool marks real (non-pad) tokens under bucketed
+    prefill: pad tokens neither claim capacity slots nor shift real
+    tokens' position-in-expert, and the keep threshold is the capacity
+    the real token count alone would get — routing is exactly that of an
+    exact-length prefill (pads read back zero).
+    """
     b, s, d = x.shape
     n = b * s
     moe_cfg = cfg.moe
@@ -65,8 +90,16 @@ def _moe_local(x: Array, p, cfg, act: str, e_offset: int, e_local: int,
     flat_w = topw.reshape(-1)
     tok_of = jnp.arange(n * moe_cfg.top_k) // moe_cfg.top_k
     onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    if valid is not None:
+        pair_valid = valid.reshape(-1)[tok_of]
+        onehot = onehot * pair_valid[:, None].astype(jnp.int32)
+        dyn_cap = _dynamic_capacity(jnp.sum(valid.astype(jnp.int32)),
+                                    n, cfg)
     pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
-    keep = pos < cap
+    if valid is not None:
+        keep = (pos < dyn_cap) & pair_valid
+    else:
+        keep = pos < cap
     is_local = (flat_e >= e_offset) & (flat_e < e_offset + e_local) & keep
     le = jnp.clip(flat_e - e_offset, 0, e_local - 1)
     lp = jnp.clip(pos, 0, cap - 1)
@@ -75,7 +108,7 @@ def _moe_local(x: Array, p, cfg, act: str, e_offset: int, e_local: int,
     # (dynamic_slice: e_offset is a traced axis_index under shard_map.)
     counts = jax.lax.dynamic_slice_in_dim(jnp.sum(onehot, axis=0),
                                           e_offset, e_local)
-    sizes = jnp.minimum(counts, cap)
+    sizes = jnp.minimum(counts, dyn_cap if valid is not None else cap)
     vals = jnp.where(is_local[:, None], xt[tok_of], 0).astype(x.dtype)
 
     if EXPERT_BACKEND["impl"] != "xla":
@@ -186,9 +219,14 @@ def _expert_ffn(buf: Array, p, act: str, sizes=None, segments=None) -> Array:
                     segments).astype(buf.dtype)
 
 
-def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
-             ) -> Tuple[Array, Array]:
-    """All-to-all EP over sequence-sharded tokens. x: (B, S_loc, d)."""
+def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int,
+             valid: Optional[Array] = None) -> Tuple[Array, Array]:
+    """All-to-all EP over sequence-sharded tokens. x: (B, S_loc, d).
+
+    ``valid`` masks pad tokens per shard exactly as in
+    :func:`_moe_local` (capacity is per-shard either way, so the
+    dynamic threshold uses the shard's real count).
+    """
     b, s, d = x.shape
     n = b * s
     moe_cfg = cfg.moe
@@ -205,8 +243,16 @@ def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
     flat_w = topw.reshape(-1)
     tok_of = jnp.arange(n * moe_cfg.top_k) // moe_cfg.top_k
     onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    if valid is not None:
+        pair_valid = valid.reshape(-1)[tok_of]
+        onehot = onehot * pair_valid[:, None].astype(jnp.int32)
+        dyn_cap = _dynamic_capacity(jnp.sum(valid.astype(jnp.int32)),
+                                    n, cfg)
     pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
-    keep = pos < cap
+    if valid is not None:
+        keep = (pos < dyn_cap) & pair_valid
+    else:
+        keep = pos < cap
     lp = jnp.clip(pos, 0, cap - 1)
     vals = jnp.where(keep[:, None], xt[tok_of], 0).astype(x.dtype)
     buf = jnp.zeros((e, cap, d), x.dtype).at[flat_e, lp].add(vals)
@@ -221,7 +267,8 @@ def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
         # lower through the segment-offset flat kernel.
         from repro.kernels.grouped_gemm import a2a_segments, aligned_block_rows
         e_local = e // ms
-        sizes = jnp.minimum(jnp.sum(onehot, axis=0), cap)     # (E,)
+        sizes = jnp.minimum(jnp.sum(onehot, axis=0),
+                            dyn_cap if valid is not None else cap)  # (E,)
         recv = jax.lax.all_to_all(sizes.reshape(ms, e_local), model_axis,
                                   split_axis=0, concat_axis=0, tiled=True)
         m_hint = min(cap, 64)
@@ -247,13 +294,16 @@ def _moe_a2a(x: Array, p, cfg, act: str, model_axis: str, ms: int
 
 def moe_apply(p, x: Array, cfg, *, mesh=None,
               batch_axes: Sequence[str] = (),
-              model_axis: str = "model") -> Tuple[Array, Array]:
+              model_axis: str = "model",
+              valid: Optional[Array] = None) -> Tuple[Array, Array]:
     """x: (B, S, d) -> (y, aux_loss).  EP over ``model_axis`` if a mesh
-    with that axis (size > 1) is supplied."""
+    with that axis (size > 1) is supplied.  ``valid`` (B, S) bool marks
+    real tokens under bucketed (right-padded) prefill — see
+    :func:`_moe_local`."""
     e = cfg.moe.n_experts
     if mesh is None or model_axis not in mesh.axis_names \
             or mesh.shape[model_axis] == 1:
-        y, aux = _moe_local(x, p, cfg, cfg.act, 0, e, None)
+        y, aux = _moe_local(x, p, cfg, cfg.act, 0, e, None, valid=valid)
         return y, aux
 
     ms = mesh.shape[model_axis]
@@ -263,7 +313,7 @@ def moe_apply(p, x: Array, cfg, *, mesh=None,
         # local path (param_specs leaves the expert weights unsharded
         # under the same guard, so this is GSPMD-consistent) instead of
         # refusing to serve on an odd mesh shape.
-        y, aux = _moe_local(x, p, cfg, cfg.act, 0, e, None)
+        y, aux = _moe_local(x, p, cfg, cfg.act, 0, e, None, valid=valid)
         return y, aux
     e_local = e // ms
     use_a2a = (EP_IMPL["impl"] == "all_to_all"
@@ -277,24 +327,35 @@ def moe_apply(p, x: Array, cfg, *, mesh=None,
     if "gate" in p:
         args.append(p["gate"])
         in_specs.append(espec)
+    has_gate = "gate" in p
+    if valid is not None:
+        args.append(valid)
+        in_specs.append(P(tuple(batch_axes) if batch_axes else None,
+                          model_axis if use_a2a else None))
+    has_valid = valid is not None
+
+    def unpack(router, up, down, rest):
+        rest = list(rest)
+        pp = {"router": router, "up": up, "down": down}
+        if has_gate:
+            pp["gate"] = rest.pop(0)
+        v = rest.pop(0) if has_valid else None
+        return pp, v
 
     all_axes = tuple(batch_axes) + (model_axis,)
     if use_a2a:
-        def shard_fn(x_, router, up, down, *maybe_gate):
-            pp = {"router": router, "up": up, "down": down}
-            if maybe_gate:
-                pp["gate"] = maybe_gate[0]
-            y, aux = _moe_a2a(x_, pp, cfg, cfg.act, model_axis, ms)
+        def shard_fn(x_, router, up, down, *rest):
+            pp, v = unpack(router, up, down, rest)
+            y, aux = _moe_a2a(x_, pp, cfg, cfg.act, model_axis, ms,
+                              valid=v)
             return y, jax.lax.pmean(aux, all_axes)
         out_specs = (b_sp, P())
     else:
-        def shard_fn(x_, router, up, down, *maybe_gate):
+        def shard_fn(x_, router, up, down, *rest):
             rank = jax.lax.axis_index(model_axis)
-            pp = {"router": router, "up": up, "down": down}
-            if maybe_gate:
-                pp["gate"] = maybe_gate[0]
+            pp, v = unpack(router, up, down, rest)
             y, aux = _moe_local(x_, pp, cfg, cfg.act, rank * e_local,
-                                e_local, model_axis)
+                                e_local, model_axis, valid=v)
             return y, jax.lax.pmean(aux, all_axes)
         out_specs = (bspec, P())
 

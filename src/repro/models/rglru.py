@@ -89,18 +89,42 @@ def rglru_init_cache(batch: int, d: int, dtype) -> Dict[str, Array]:
             "conv": jnp.zeros((batch, _CONV_W - 1, d), dtype)}
 
 
-def rglru_prefill_cache(p, x: Array, cfg) -> Dict[str, Array]:
-    """Run the recurrence over the prompt, keep final state."""
-    u = _conv1d(p, linear_apply(p["in_rec"], x))
+def rglru_prefill_cache(p, x: Array, cfg, last_index=None) -> Dict[str, Array]:
+    """Run the recurrence over the prompt, keep final state.
+
+    ``last_index`` (scalar or (B,), traced) marks each row's real last
+    token when ``x`` is right-padded to a bucket length.  Pad positions
+    are forced to the identity transition (``a=1, b=0``) so the carried
+    state freezes at the real last token, and the conv tail is gathered
+    at ``last-2..last`` — bucketed prefill is exact, no rollback pass.
+    """
+    u_raw = linear_apply(p["in_rec"], x)
+    u = _conv1d(p, u_raw)
     a, b = _gates(p, u.astype(jnp.float32))
+    if last_index is not None:
+        last = jnp.asarray(last_index)
+        last = last if last.ndim == 1 else jnp.full((x.shape[0],), last)
+        t = jnp.arange(x.shape[1])
+        pad = (t[None, :] > last[:, None])[:, :, None]
+        a = jnp.where(pad, 1.0, a)
+        b = jnp.where(pad, 0.0, b)
+
     def combine(lhs, rhs):
         a1, b1 = lhs
         a2, b2 = rhs
         return a1 * a2, a2 * b1 + b2
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
-    u_raw = linear_apply(p["in_rec"], x)
-    return {"h": h[:, -1].astype(jnp.float32),
-            "conv": u_raw[:, -(_CONV_W - 1):]}
+    if last_index is not None:
+        src = last[:, None] - (_CONV_W - 2) + jnp.arange(_CONV_W - 1)[None, :]
+        idx = jnp.clip(src, 0, x.shape[1] - 1)[:, :, None]
+        conv = jnp.where((src >= 0)[:, :, None],
+                         jnp.take_along_axis(u_raw, idx, axis=1), 0)
+    else:
+        # normalize short prompts to a full (B, _CONV_W-1, d) tail with
+        # leading zeros, matching _conv1d's implicit zero history
+        conv = jnp.pad(u_raw, ((0, 0), (_CONV_W - 1, 0), (0, 0))
+                       )[:, -(_CONV_W - 1):]
+    return {"h": h[:, -1].astype(jnp.float32), "conv": conv}
 
 
 def rglru_decode_step(p, x: Array, cache: Dict[str, Array], cfg,

@@ -123,8 +123,17 @@ def _chunk_scan(r, k, v, wlog, u, s0):
 def rwkv_apply(p, x: Array, cfg, x_prev: Array = None,
                state0: Array = None,
                sharder: Sharder = IDENTITY_SHARDER,
-               return_state: bool = False):
-    """Full-sequence time-mix. x: (B, S, d)."""
+               return_state: bool = False,
+               last_index: Array = None):
+    """Full-sequence time-mix. x: (B, S, d).
+
+    ``last_index`` (scalar or (B,), traced) marks each row's real last
+    token when ``x`` is right-padded to a bucket length: positions past
+    it get ``k = 0`` (no kv outer product) and decay 1 (``wlog = 0``) —
+    the same trick the CHUNK pad already uses, generalized per row — so
+    the returned state is exactly the state at the real last token and
+    ``shift`` is gathered there.  Bucketed prefill is exact, no rollback.
+    """
     b, s, d = x.shape
     h, hd = rwkv_head_dims(cfg)
     if x_prev is None:
@@ -134,10 +143,18 @@ def rwkv_apply(p, x: Array, cfg, x_prev: Array = None,
     pad = (-s) % CHUNK
     xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
     r, k, v, wlog = _projections(p, xp, x_prev, h, hd)
-    if pad:
+    if last_index is not None:
+        last = jnp.asarray(last_index)
+        last = last if last.ndim == 1 else jnp.full((b,), last)
+        valid = (jnp.arange(s + pad)[None, :]
+                 <= last[:, None])[:, :, None, None]
+    elif pad:
         # Padded positions must not touch the carried state: zero their
         # k (no kv outer product) and set decay to 1 (wlog = 0).
         valid = (jnp.arange(s + pad) < s)[None, :, None, None]
+    else:
+        valid = None
+    if valid is not None:
         k = jnp.where(valid, k, 0)
         wlog = jnp.where(valid, wlog, 0.0)
     out, s_final = _chunk_scan(r, k, v, wlog, p["u"], state0)
@@ -145,7 +162,12 @@ def rwkv_apply(p, x: Array, cfg, x_prev: Array = None,
     out = sharder.constrain(out.astype(x.dtype), "attn_q")
     y = linear_apply(p["o"], out.reshape(b, s, h * hd))
     if return_state:
-        return y, {"state": s_final, "shift": x[:, -1]}
+        if last_index is not None:
+            shift = jnp.take_along_axis(
+                x, jnp.clip(last, 0, s - 1)[:, None, None], axis=1)[:, 0]
+        else:
+            shift = x[:, -1]
+        return y, {"state": s_final, "shift": shift}
     return y
 
 

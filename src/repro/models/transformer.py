@@ -288,8 +288,14 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 def _block_prefill(p, x, kind, cfg, cap_seq, *, sharder, enc_out,
-                   mesh=None, batch_axes=()):
-    """Block forward that also emits its filled cache."""
+                   mesh=None, batch_axes=(), last_index=None):
+    """Block forward that also emits its filled cache.
+
+    ``last_index`` marks each row's real last token under bucketed
+    (right-padded) prefill: ring-capacity attention layers lay their
+    cache at the real length, and recurrent layers freeze their carried
+    state there — so padded prefill fills caches identically to an
+    exact-length prefill."""
     h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     if kind in (ATTN, LOCAL, BIDIR):
         mix = attn.attn_apply(p["mixer"], h, cfg,
@@ -297,13 +303,17 @@ def _block_prefill(p, x, kind, cfg, cap_seq, *, sharder, enc_out,
         cap = attn.cache_capacity("local" if kind == LOCAL else "attn",
                                   cap_seq, cfg.sliding_window)
         cache = attn.prefill_into_cache(p["mixer"], h, cfg,
-                                        kind=kind, cap=cap, sharder=sharder)
+                                        kind=kind, cap=cap,
+                                        last_index=last_index,
+                                        sharder=sharder)
     elif kind == RGLRU:
         mix = rglru_mod.rglru_apply(p["mixer"], h, cfg, sharder=sharder)
-        cache = rglru_mod.rglru_prefill_cache(p["mixer"], h, cfg)
+        cache = rglru_mod.rglru_prefill_cache(p["mixer"], h, cfg,
+                                              last_index=last_index)
     else:
         mix, cache = rwkv_mod.rwkv_apply(p["mixer"], h, cfg, sharder=sharder,
-                                         return_state=True)
+                                         return_state=True,
+                                         last_index=last_index)
     x = sharder.constrain(x + mix, "hidden")
     if "cross" in p and enc_out is not None:
         h = rmsnorm_apply(p["norm_cross"], x, cfg.norm_eps)
@@ -314,8 +324,14 @@ def _block_prefill(p, x, kind, cfg, cap_seq, *, sharder, enc_out,
                                                sharder)}
     h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
     if cfg.moe is not None:
+        valid = None
+        if last_index is not None:
+            last = jnp.asarray(last_index)
+            last = (last if last.ndim == 1
+                    else jnp.full((x.shape[0],), last))
+            valid = jnp.arange(x.shape[1])[None, :] <= last[:, None]
         ffn, _ = moe_mod.moe_apply(p["moe"], h, cfg, mesh=mesh,
-                                   batch_axes=batch_axes)
+                                   batch_axes=batch_axes, valid=valid)
     else:
         ffn = mlp_apply(p["mlp"], h, cfg.act, sharder)
     return sharder.constrain(x + ffn, "hidden"), cache
@@ -357,7 +373,8 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
                 x, c = _block_prefill(layer_p[f"b{i}"], x, kind, cfg,
                                       cap_seq, sharder=sharder,
                                       enc_out=enc_out, mesh=mesh,
-                                      batch_axes=batch_axes)
+                                      batch_axes=batch_axes,
+                                      last_index=logits_index)
                 cache[f"b{i}"] = c
             return x, cache
         x, cache = jax.lax.scan(body, x, gp)
@@ -374,15 +391,21 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict[str, Array], *,
 
 
 def _block_decode(p, x, cache, pos, kind, cfg, *, sharder,
-                  mesh=None, batch_axes=(), page_table=None):
+                  mesh=None, batch_axes=(), page_table=None,
+                  window_cap=None):
     h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     self_cache = cache["self"] if "cross" in p else cache
     if kind in (ATTN, LOCAL, BIDIR) and "pk" in self_cache:
-        # Paged layer: the cache leaf is this layer's slice of the
-        # shared page pool; indirection goes through ``page_table``.
+        # Paged global layer: the cache leaf is this layer's slice of
+        # the shared page pool; indirection goes through ``page_table``.
         mix, new_cache = attn.paged_attn_decode_step(
-            p["mixer"], h, self_cache, page_table, pos, cfg,
+            p["mixer"], h, self_cache, page_table["global"], pos, cfg,
             sharder=sharder)
+    elif kind in (ATTN, LOCAL, BIDIR) and "lk" in self_cache:
+        # Paged sliding-window layer: ring of R pages per row.
+        mix, new_cache = attn.paged_local_attn_decode_step(
+            p["mixer"], h, self_cache, page_table["local"], pos, cfg,
+            window_cap=window_cap or cfg.sliding_window, sharder=sharder)
     elif kind in (ATTN, LOCAL, BIDIR):
         mix, new_cache = attn.attn_decode_step(
             p["mixer"], h, self_cache, pos, cfg, kind=kind, sharder=sharder)
@@ -395,8 +418,13 @@ def _block_decode(p, x, cache, pos, kind, cfg, *, sharder,
     x = x + mix
     if "cross" in p:
         h = rmsnorm_apply(p["norm_cross"], x, cfg.norm_eps)
-        x = x + attn.cross_attn_decode(p["cross"], h, cache["cross"], cfg,
-                                       sharder)
+        if "ck" in cache["cross"]:
+            x = x + attn.paged_cross_attn_decode(
+                p["cross"], h, cache["cross"], page_table["cross"], cfg,
+                enc_len=cfg.enc_frames, sharder=sharder)
+        else:
+            x = x + attn.cross_attn_decode(p["cross"], h, cache["cross"],
+                                           cfg, sharder)
         new_cache = {"self": new_cache, "cross": cache["cross"]}
     h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
     if cfg.moe is not None:
@@ -410,16 +438,24 @@ def _block_decode(p, x, cache, pos, kind, cfg, *, sharder,
 def forward_decode(params, cfg: ModelConfig, tokens: Array,
                    caches: List[PyTree], pos: Array, *,
                    sharder: Sharder = IDENTITY_SHARDER, mesh=None,
-                   batch_axes=(), page_table: Optional[Array] = None
+                   batch_axes=(), page_table=None,
+                   window_cap: Optional[int] = None
                    ) -> Tuple[Array, List[PyTree]]:
     """One decode step. tokens: (B, 1); pos: scalar position index, or a
     (B,) vector of per-row positions (slot-engine decode — see
     :func:`repro.models.attention.attn_decode_step`).
 
     With ``page_table`` set, attention cache leaves are expected to be
-    page pools (``{"pk", "pv"}`` with leading layer axis, scanned like
-    dense caches) and each layer resolves K/V through the shared table
-    (:func:`repro.models.attention.paged_attn_decode_step`)."""
+    page pools with leading layer axis, scanned like dense caches.  It
+    may be a bare ``(B, max_pages)`` array (pure global paging, the
+    PR-5 calling convention) or a dict of per-class tables —
+    ``{"global": ..., "local": (B, R) ring table, "cross": (B, C)}`` —
+    each layer resolving K/V through the table matching its cache leaf
+    names (``pk``/``lk``/``ck``).  ``window_cap`` is the dense-ring
+    capacity ``min(sliding_window, max_seq)`` for paged local layers
+    (defaults to ``cfg.sliding_window``)."""
+    if page_table is not None and not isinstance(page_table, dict):
+        page_table = {"global": page_table}
     x = embedding_lookup(params["embed"], tokens)
     x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
     x = sharder.constrain(x, "hidden_decode")
@@ -434,7 +470,8 @@ def forward_decode(params, cfg: ModelConfig, tokens: Array,
                 x, c = _block_decode(layer_p[f"b{i}"], x, layer_c[f"b{i}"],
                                      pos, kind, cfg, sharder=sharder,
                                      mesh=mesh, batch_axes=batch_axes,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     window_cap=window_cap)
                 new_c[f"b{i}"] = c
             return x, new_c
         x, new_cache = jax.lax.scan(body, x, (gp, cache))

@@ -78,6 +78,29 @@ class Request:
     deadline: Optional[float] = None
     preemptions: int = 0
     finish_reason: Optional[str] = None
+    # enc-dec only: fixed-shape (cfg.enc_frames, cfg.frontend_dim)
+    # encoder features (whisper mel frames through the stub frontend).
+    # None serves against all-zero features (still a valid encoding).
+    enc_embeds: Optional[np.ndarray] = None
+
+
+def encoder_inputs(req: Request, cfg: ModelConfig) -> Optional[np.ndarray]:
+    """The fixed-shape encoder feature block a prefill of ``req`` needs.
+
+    Enc-dec serving keeps the encoder at one static source length
+    (``cfg.enc_frames``) so the encoder traces exactly once and decoder
+    prompt bucketing stays exact — features must arrive pre-padded.
+    """
+    if not cfg.enc_dec:
+        return None
+    if req.enc_embeds is None:
+        return np.zeros((cfg.enc_frames, cfg.frontend_dim), np.float32)
+    e = np.asarray(req.enc_embeds, np.float32)
+    if e.shape != (cfg.enc_frames, cfg.frontend_dim):
+        raise ValueError(
+            f"enc_embeds must be ({cfg.enc_frames}, {cfg.frontend_dim}), "
+            f"got {e.shape}")
+    return e
 
 
 def effective_tokens(req: Request) -> np.ndarray:
@@ -331,7 +354,11 @@ class ServeEngine:
     def _prefill_one(self, req: Request):
         s = len(req.prompt)
         tokens = jnp.asarray(req.prompt[None], jnp.int32)
-        logits, cache = self.prefill_fn(self.params, {"tokens": tokens})
+        batch = {"tokens": tokens}
+        enc = encoder_inputs(req, self.cfg)
+        if enc is not None:
+            batch["frontend_embeds"] = jnp.asarray(enc[None])
+        logits, cache = self.prefill_fn(self.params, batch)
         note_first_token(req, logits, self.cfg.vocab_size, self.stats)
         return cache, s
 

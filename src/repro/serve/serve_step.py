@@ -84,18 +84,22 @@ def make_decode_step(cfg: ModelConfig, mesh=None, *, batch_axes=None):
     return decode_step
 
 
-def make_paged_decode_step(cfg: ModelConfig, mesh=None, *, batch_axes=None):
+def make_paged_decode_step(cfg: ModelConfig, mesh=None, *, batch_axes=None,
+                           window_cap: Optional[int] = None):
     """Decode step over block-granular paged KV storage.
 
     The returned step takes ``(params, pools, page_table, tokens, pos)``
     where ``pools`` mirrors a dense cache pytree but every attention
     leaf is a page pool ``{"pk": (L, n_pages, page_size, Hkv, hd),
     "pv": ...}`` shared by all requests, ``page_table`` is the per-slot
-    ``(max_batch, max_pages_per_slot) int32`` indirection, and ``pos``
-    is per-row ``(B,)``.  Used by
+    ``(max_batch, max_pages_per_slot) int32`` indirection — or a dict of
+    per-class tables (``"global"``/``"local"``/``"cross"``) when the
+    config mixes layer kinds — and ``pos`` is per-row ``(B,)``.  Used by
     :class:`repro.serve.paged_engine.PagedServeEngine`; the table is a
     fixed-shape operand, so page-table *growth* (writing more entries)
     never changes any argument shape and never triggers a recompile.
+    ``window_cap`` pins the paged local layers' logical ring capacity to
+    the engine's ``min(sliding_window, max_seq)``.
     """
     sharder = (MeshSharder(mesh, cfg, batch_axes=batch_axes)
                if mesh is not None else IDENTITY_SHARDER)
@@ -104,11 +108,12 @@ def make_paged_decode_step(cfg: ModelConfig, mesh=None, *, batch_axes=None):
     elif batch_axes is None:
         batch_axes = mesh_axes_for(mesh).batch
 
-    def decode_step(params, pools, page_table: jax.Array,
+    def decode_step(params, pools, page_table,
                     tokens: jax.Array, pos: jax.Array):
         return forward_decode(params, cfg, tokens, pools, pos,
                               sharder=sharder, mesh=mesh,
-                              batch_axes=batch_axes, page_table=page_table)
+                              batch_axes=batch_axes, page_table=page_table,
+                              window_cap=window_cap)
 
     return decode_step
 

@@ -32,12 +32,16 @@ serving loop is as ladder-shaped as the kernels:
 * **Bucketed prefill**: prompts pad to power-of-two buckets
   (:func:`repro.serve.serve_step.make_bucketed_prefill_step`) so
   ``prefill_fn`` compiles once per bucket, not once per unique prompt
-  length.  Bucketing is enabled only where pad-append is exact: pure
-  attention stacks (causal masking hides trailing pads; the per-slot
-  decode mask keeps their cache slots invisible until overwritten).
-  Recurrent (RG-LRU/RWKV) states, MoE routing, and enc-dec fold pad
-  tokens into real outputs, so those configs always take the
-  exact-length path (counted as bucket misses).
+  length.  Bucketing is exact for *every* registry architecture: causal
+  masking hides trailing pads from attention (per-slot decode masks keep
+  their cache cells invisible), sliding-window layers lay buckets longer
+  than their ring capacity via a rolled-ring gather at each row's real
+  last token, recurrent (RG-LRU/RWKV) prefills freeze their carried
+  state at the real last token, MoE routing masks pads out of the
+  capacity cumsum with an exact dynamic threshold, and enc-dec decoder
+  pads are causal like any other.  Buckets clamp to ``max_seq``; only
+  prompts *longer* than the engine capacity fall back to exact-length
+  prefill (counted separately as ``prefill_bucket_fallbacks``).
 
 Token equivalence: in the slot engine, rows are fully independent — a
 request's tokens equal its single-request serve regardless of batch
@@ -62,12 +66,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ATTN, LOCAL, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.distributed.sharding import (cache_specs, param_specs, to_named)
 from repro.serve.api import completion_of, Completion, FINISH_CANCELLED
-from repro.serve.engine import (effective_tokens, init_serve_stats,
-                                note_first_token, record_step_packing,
-                                Request, SLAB_LADDER)
+from repro.serve.engine import (effective_tokens, encoder_inputs,
+                                init_serve_stats, note_first_token,
+                                record_step_packing, Request, SLAB_LADDER)
 from repro.serve.policy import KLASS_BATCH, SchedulingPolicy
 from repro.serve.serve_step import (make_bucketed_prefill_step,
                                     make_decode_step)
@@ -223,32 +227,32 @@ class SlotServeEngine:
                        | {max_batch})
         self.rungs: Tuple[int, ...] = tuple(rungs)
 
-        # Bucketing is exact only for pure-attention stacks (module doc).
-        structurally_ok = (not cfg.enc_dec and cfg.moe is None
-                           and cfg.frontend is None
-                           and all(k in (ATTN, LOCAL)
-                                   for k in cfg.layer_pattern))
+        # Bucketed prefill is exact for every layer family (module doc),
+        # so the only gate left is an injected prefill_fn that cannot
+        # take a last_index.
         if prefill_fn is None:
-            self._bucket_enabled = prefill_bucketing and structurally_ok
+            self._bucket_enabled = prefill_bucketing
             self._prefill_needs_index = True
             self.prefill_fn = jax.jit(self._make_prefill_step())
         else:
             self.prefill_fn = prefill_fn
             self._prefill_needs_index = bool(prefill_is_bucketed)
-            self._bucket_enabled = (prefill_bucketing and structurally_ok
+            self._bucket_enabled = (prefill_bucketing
                                     and self._prefill_needs_index)
-        # Pad-append must stay within every layer's cache capacity
-        # (sliding-window ring buffers would otherwise evict real tokens
-        # for pads).
+        # Buckets clamp to the engine capacity; sliding-window layers
+        # whose ring is shorter than a bucket lay the last ring-capacity
+        # tokens via the rolled-ring prefill layout, so the clamp no
+        # longer shrinks to the window.
         self._bucket_cap = max_seq
-        if any(k == LOCAL for k in cfg.layer_pattern):
-            self._bucket_cap = min(max_seq, cfg.sliding_window)
         self._seen_buckets: set = set()
 
         # Batched multi-prompt prefill needs the builtin bucketed step
         # (vector last_index); injected prefill_fns opt in by setting
-        # this attribute after construction.
-        self._batch_prefill = self._bucket_enabled and prefill_fn is None
+        # this attribute after construction.  MoE stays serial: routing
+        # capacity couples batch rows, so a coalesced group would not be
+        # row-identical to singleton prefills.
+        self._batch_prefill = (self._bucket_enabled and prefill_fn is None
+                               and cfg.moe is None)
 
         self.decode_fn = decode_fn or self._default_decode_fn()
         self._window_traces = 0     # re-trace count; see _build_window_fn
@@ -280,6 +284,7 @@ class SlotServeEngine:
         return {
             "windows": 0, "rungs": [],
             "prefill_bucket_hits": 0, "prefill_bucket_misses": 0,
+            "prefill_bucket_fallbacks": 0,
             "prefill_batches": 0, "prefill_batched_reqs": 0,
             "slot_admits": 0, "slot_releases": 0,
             "preemptions": 0, "cancelled": 0,
@@ -463,10 +468,17 @@ class SlotServeEngine:
         self.policy.enqueue(self.queue, req)
 
     def _bucket_len(self, s: int) -> Optional[int]:
+        """Prefill shape bucket for an ``s``-token prompt, or None when
+        the prompt exceeds the engine capacity (exact-length fallback —
+        the ``prefill_bucket_fallbacks`` counter).  Buckets clamp to
+        ``_bucket_cap`` so every servable prompt lands in a finite,
+        warmup-enumerable bucket set."""
+        if s > self._bucket_cap:
+            return None
         b = _MIN_BUCKET
         while b < s:
             b *= 2
-        return b if b <= self._bucket_cap else None
+        return min(b, self._bucket_cap)
 
     def _prefill_one(self, req: Request):
         # A preempted request resumes by re-prefilling every token it
@@ -489,8 +501,11 @@ class SlotServeEngine:
                 padded[:s] = toks
                 tokens = padded[None]
             else:
-                # Bucket would overflow a cache capacity: exact length.
-                self.stats["engine"]["prefill_bucket_misses"] += 1
+                # Prompt exceeds the engine capacity: exact-length
+                # fallback, distinct from a first-seen bucket (misses
+                # compile once and then hit; fallbacks compile per
+                # unique length every time).
+                self.stats["engine"]["prefill_bucket_fallbacks"] += 1
                 tokens = np.asarray(toks[None], np.int32)
             batch = {"tokens": jnp.asarray(tokens),
                      "last_index": jnp.int32(s - 1)}
@@ -498,6 +513,9 @@ class SlotServeEngine:
             batch = {"tokens": jnp.asarray(toks[None], jnp.int32)}
             if self._prefill_needs_index:
                 batch["last_index"] = jnp.int32(s - 1)
+        enc = encoder_inputs(req, self.cfg)
+        if enc is not None:
+            batch["frontend_embeds"] = jnp.asarray(enc[None])
         logits, cache = self.prefill_fn(self.params, batch)
         if not resume:
             note_first_token(req, logits, self.cfg.vocab_size, self.stats)
@@ -849,9 +867,13 @@ class SlotServeEngine:
             src = group[i] if i < k else group[0]
             toks[i, :len(src.prompt)] = src.prompt
             last[i] = len(src.prompt) - 1
-        logits, cache = self.prefill_fn(
-            self.params, {"tokens": jnp.asarray(toks),
-                          "last_index": jnp.asarray(last)})
+        batch = {"tokens": jnp.asarray(toks),
+                 "last_index": jnp.asarray(last)}
+        if self.cfg.enc_dec:
+            encs = [encoder_inputs(group[i] if i < k else group[0],
+                                   self.cfg) for i in range(rung)]
+            batch["frontend_embeds"] = jnp.asarray(np.stack(encs))
+        logits, cache = self.prefill_fn(self.params, batch)
         for i, req in enumerate(group):
             note_first_token(req, logits[i:i + 1], self.cfg.vocab_size,
                              self.stats)

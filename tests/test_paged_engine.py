@@ -447,10 +447,6 @@ class TestMemoryFootprint:
         assert paged < 0.6 * dense, (paged, dense)
 
     def test_rejects_unsupported_configs(self, setup):
-        _, params = setup
-        gemma = smoke_config("gemma3-1b")   # sliding-window layers
-        with pytest.raises(ValueError):
-            make_engine(gemma, None, kind="paged", max_slots=2, max_seq=32)
         cfg, params = setup
         with pytest.raises(ValueError):    # exact-length caches can't page
             make_engine(cfg, params, kind="paged", max_slots=2, max_seq=32,
@@ -607,3 +603,133 @@ class TestResetLifecycle:
         for key, pg in eng._prefix_registry.items():
             assert eng.cache.page_refcount(pg) >= 1
             assert eng._page_key.get(pg) == key
+
+
+def _fake_local_cache(cap: int, fill: float):
+    """Single-request prefill cache with only sliding-window leaves:
+    dense cell c of lk holds fill + c."""
+    vals = fill + np.arange(cap, dtype=np.float32)
+    leaf = jnp.asarray(vals, jnp.float32).reshape(1, 1, cap, 1, 1)
+    return [{"b0": {"lk": leaf, "lv": leaf + 0.5}}]
+
+
+class TestLocalRingAllocator:
+    """White-box local-ring lifecycle: admission maps one fixed ring,
+    advance_ring frees dead columns back to the pool (FIFO — reclaimed
+    pages transit the whole free list before reuse), and release
+    returns everything."""
+
+    def test_ring_admit_regather_and_sink(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX,
+                             local_ring=3, num_local_pages=12)
+        slot = cache.acquire()
+        # One-page prompt, last real token at dense cell 2.
+        cache.admit(_fake_local_cache(PSZ, 100.0), slot, 0, last_index=2)
+        assert cache.n_free_local == 12 - 3
+        row = cache.local_pages_of(slot)
+        assert len(row) == 3 and len(set(row)) == 3
+        ltable = np.asarray(cache.ltable)
+        assert ltable[slot].tolist() == row
+        for s in range(SLOTS):
+            if s != slot:
+                assert (ltable[s] == cache.lsink).all()
+        # Ring cell c of column 0 holds dense cell c (identity layout
+        # when the prompt fits) up to the last real token; cells ahead
+        # of it — and the whole un-decoded columns — are zeroed, not
+        # garbage (decode writes each cell before any read of it).
+        lk = np.asarray(jax.tree.leaves(cache.pools)[0])[0, :, :, 0, 0]
+        np.testing.assert_allclose(
+            lk[row[0]], np.where(np.arange(PSZ) <= 2,
+                                 100.0 + np.arange(PSZ), 0.0))
+        np.testing.assert_allclose(lk[row[1]], 0.0)
+        np.testing.assert_allclose(lk[row[2]], 0.0)
+
+    def test_advance_ring_rotates_through_free_list(self):
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX,
+                             local_ring=3, num_local_pages=12)
+        slot = cache.acquire()
+        cache.admit(_fake_local_cache(PSZ, 1.0), slot, 0, last_index=2)
+        row0 = cache.local_pages_of(slot)
+        free0 = list(cache._free_local)
+        # Decode crosses two block boundaries: columns for blocks 1 and
+        # 2 retire their pages and remap from the FIFO front.
+        assert cache.advance_ring(slot, 2) == 2
+        row1 = cache.local_pages_of(slot)
+        # Column 0 (still inside the window span) kept its page; the
+        # re-targeted columns took the two oldest free pages, and the
+        # freed pages went to the *back* of the free list.
+        assert row1[0] == row0[0]
+        assert row1[1:] == free0[:2]
+        assert list(cache._free_local)[-2:] == [row0[1], row0[2]]
+        # Idempotent: the same block advances nothing twice.
+        assert cache.advance_ring(slot, 2) == 0
+        # Conservation at every step: rings + free list == the pool.
+        held = [p for s in range(SLOTS) for p in cache.local_pages_of(s)]
+        assert sorted(held + list(cache._free_local)) == list(range(12))
+        # Wrap-around: far-future block reuses column (block % ring).
+        assert cache.advance_ring(slot, 5) == 3
+        assert np.asarray(cache.ltable)[slot].tolist() == \
+            cache.local_pages_of(slot)
+        cache.release(slot)
+        assert cache.n_free_local == 12
+        assert (np.asarray(cache.ltable)[slot] == cache.lsink).all()
+
+    def test_exact_pool_self_swap_is_safe(self):
+        """With an exactly-sized pool fully held, advance_ring's
+        free-then-alloc hands the column its own page back — a no-op
+        swap that still counts as a reclaim and never underflows."""
+        cache = PagedKVCache(1, PAGES, PSZ, PMAX,
+                             local_ring=3, num_local_pages=3)
+        slot = cache.acquire()
+        cache.admit(_fake_local_cache(PSZ, 1.0), slot, 0, last_index=2)
+        assert cache.n_free_local == 0
+        row0 = cache.local_pages_of(slot)
+        assert cache.advance_ring(slot, 1) == 1
+        assert cache.local_pages_of(slot) == row0   # self-swap
+        assert cache.n_free_local == 0
+
+
+class TestResidentBytesPreshape:
+    """resident_bytes satellite: engines report the configured pool
+    footprint from construction (not 0 until the first admission), and
+    reset() preserves it."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = smoke_config("yi-6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_engine_reports_footprint_before_first_admission(self, setup):
+        cfg, params = setup
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=32, window=2, page_size=8)
+        configured = eng.cache.resident_bytes()
+        assert configured > 0
+        got = _run(eng, _prompts([6, 9], cfg.vocab_size), [3, 3])
+        assert len(got) == 2
+        # Admission/decode never changes the footprint (pools are
+        # preallocated; tables are fixed-shape).
+        assert eng.cache.resident_bytes() == configured
+        eng.reset()
+        assert eng.cache.resident_bytes() == configured
+
+    def test_quantized_pool_preshape_matches_lazy(self, setup):
+        cfg, params = setup
+        eng = make_engine(cfg, params, kind="paged", max_slots=2,
+                          max_seq=32, window=2, page_size=8,
+                          kv_quant="int8")
+        configured = eng.cache.resident_bytes()
+        assert configured > 0
+        _run(eng, _prompts([6], cfg.vocab_size), [3])
+        assert eng.cache.resident_bytes() == configured
+
+    def test_direct_cache_stays_lazy(self):
+        """Back-compat: a directly constructed cache (no engine, no
+        preshape) still reports 0 until its first admission shapes the
+        pools."""
+        cache = PagedKVCache(SLOTS, PAGES, PSZ, PMAX)
+        assert cache.resident_bytes() == 0
+        slot = cache.acquire()
+        cache.admit(_fake_cache(2, 1.0), slot, 3)
+        assert cache.resident_bytes() > 0

@@ -326,3 +326,312 @@ class TestWideSweep:
             got = _serve(engines[name], workload, prompts)
             assert got == (slot_want if name == "slot_co" else want), name
             _check_serve_stats(engines[name], got, workload)
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide serve matrix: every architecture through both fast paths
+# ---------------------------------------------------------------------------
+from repro.configs.registry import ASSIGNED_ARCHS  # noqa: E402
+
+# Nightly family axis: REPRO_ARCH=<substring> narrows the matrix to the
+# matching configs (e.g. REPRO_ARCH=gemma runs gemma3 + recurrentgemma).
+_ARCH_ENV = os.environ.get("REPRO_ARCH")
+MATRIX_ARCHS = ([a for a in ASSIGNED_ARCHS if _ARCH_ENV in a]
+                if _ARCH_ENV else list(ASSIGNED_ARCHS))
+
+
+def _arch_serve(eng, cfg, workload, prompts, enc=None):
+    eng.reset()
+    for rid, ((_, budget), prompt) in enumerate(zip(workload, prompts)):
+        kw = {"enc_embeds": enc[rid]} if enc is not None else {}
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=budget,
+                           **kw))
+    return {c.rid: c.tokens for c in eng.run(max_steps=4096)}
+
+
+def _enc_features(cfg, n, seed):
+    if not cfg.enc_dec:
+        return None
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((cfg.enc_frames, cfg.frontend_dim))
+            .astype(np.float32) for _ in range(n)]
+
+
+def _check_pool_drained(eng):
+    """Every pool class drains back to full when the serve completes:
+    no leaked global pages, ring pages, cross pages, or registry
+    entries."""
+    c = eng.cache
+    assert c.n_free == eng.max_batch
+    assert c.n_free_pages == c.num_pages
+    assert c.reserved_total == 0 and c.orphaned_pages == 0
+    assert c.n_free_local == c.num_local_pages
+    assert c.n_free_cross == c.num_cross_pages
+    assert not eng._prefix_registry and not eng._page_key
+    assert not eng._cross_registry and not eng._cross_key
+
+
+def _check_local_conservation(eng):
+    """Ring-page conservation: mapped rings + the free list partition
+    the local pool exactly (reclaimed pages return to the free list,
+    none are lost or duplicated)."""
+    c = eng.cache
+    held = [pg for slot in range(c.max_slots)
+            for pg in c.local_pages_of(slot)]
+    assert sorted(held + list(c._free_local)) == list(
+        range(c.num_local_pages))
+
+
+@pytest.fixture(scope="module", params=MATRIX_ARCHS)
+def arch_engines(request):
+    """Per-architecture engine trio, warmed once; reset between tests."""
+    name = request.param
+    cfg = smoke_config(name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engs = {
+        "sequential": make_engine(cfg, params, kind="sequential",
+                                  max_slots=MAX_BATCH, max_seq=MAX_SEQ),
+        "slot": make_engine(cfg, params, kind="slot",
+                            max_slots=MAX_BATCH, max_seq=MAX_SEQ,
+                            window=WINDOW),
+        "paged": make_engine(cfg, params, kind="paged",
+                             max_slots=MAX_BATCH, max_seq=MAX_SEQ,
+                             window=WINDOW, page_size=PSZ),
+    }
+    engs["slot"].warmup(max_prompt_len=24)
+    engs["paged"].warmup(max_prompt_len=24)
+    return cfg, engs
+
+
+class TestRegistryMatrix:
+    """The tentpole acceptance: every ``ASSIGNED_ARCHS`` config serves
+    through both fast paths token-identically with zero steady-state
+    decode compiles — sliding-window rings, recurrent slabs, MoE,
+    frontend, and enc-dec included."""
+
+    def test_uniform_workload_all_three_engines(self, arch_engines):
+        cfg, engs = arch_engines
+        # Uniform prompt length (the sequential engine's comparison
+        # domain); one budget long enough to cross the sliding window
+        # (smoke windows are 16) so local rings actually rotate.
+        workload = [(7, 26), (7, 6), (7, 12), (7, 3)]
+        rng = np.random.default_rng(42)
+        prompts = [rng.integers(0, cfg.vocab_size, size=s)
+                   .astype(np.int32) for s, _ in workload]
+        enc = _enc_features(cfg, len(workload), seed=1)
+        want = _arch_serve(engs["sequential"], cfg, workload, prompts, enc)
+        for name in ("slot", "paged"):
+            got = _arch_serve(engs[name], cfg, workload, prompts, enc)
+            assert got == want, (cfg.name, name)
+            assert engs[name].stats["decode_compiles"] == 0, (cfg.name,
+                                                              name)
+        paged = engs["paged"]
+        _check_pool_drained(paged)
+        ext = paged.stats["engine"]
+        from repro.configs.base import LOCAL
+        if LOCAL in cfg.layer_kinds():
+            # The long row decoded past the window: dead pages were
+            # freed back to the pool, not accumulated.
+            assert ext["window_pages_reclaimed"] > 0, cfg.name
+            assert ext["local_ring_pages"] * paged.max_batch == \
+                paged.cache.num_local_pages
+        if cfg.enc_dec:
+            assert ext["cross_admits"] == len(workload)
+
+    def test_mixed_workload_slot_vs_paged(self, arch_engines):
+        cfg, engs = arch_engines
+        # Mixed lengths around the page boundaries; min length 3 (the
+        # recurrent conv tail spans 3 taps, and the sequential engine
+        # is out of the comparison on mixed lengths anyway).
+        workload = [(9, 18), (17, 5), (3, 9), (24, 3), (8, 7)]
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, cfg.vocab_size, size=s)
+                   .astype(np.int32) for s, _ in workload]
+        enc = _enc_features(cfg, len(workload), seed=2)
+        want = _arch_serve(engs["slot"], cfg, workload, prompts, enc)
+        got = _arch_serve(engs["paged"], cfg, workload, prompts, enc)
+        assert got == want, cfg.name
+        assert engs["paged"].stats["decode_compiles"] == 0, cfg.name
+        assert engs["slot"].stats["decode_compiles"] == 0, cfg.name
+        _check_pool_drained(engs["paged"])
+
+
+# ---------------------------------------------------------------------------
+# Per-family fuzz: window boundaries, recurrent rollback, cross sharing
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def gemma_engines():
+    cfg = smoke_config("gemma3-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, {
+        "slot": make_engine(cfg, params, kind="slot", max_slots=MAX_BATCH,
+                            max_seq=MAX_SEQ, window=WINDOW),
+        "paged": make_engine(cfg, params, kind="paged",
+                             max_slots=MAX_BATCH, max_seq=MAX_SEQ,
+                             window=WINDOW, page_size=PSZ),
+    }
+
+
+class TestWindowBoundaryFuzz:
+    """Sliding-window family: prompt lengths and decode spans fuzzed
+    around the window boundary (smoke window 16) where the ring
+    re-gather, the rolled prefill layout, and page retirement all
+    change behavior."""
+
+    @given(lens=st.lists(st.sampled_from([1, 7, 15, 16, 17, 23, 31, 33]),
+                         min_size=1, max_size=5),
+           budgets=st.lists(st.integers(1, 30), min_size=5, max_size=5),
+           seed=SEEDS)
+    def test_window_crossings_token_identical(self, gemma_engines, lens,
+                                              budgets, seed):
+        cfg, engs = gemma_engines
+        workload = list(zip(lens, budgets))
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _arch_serve(engs["slot"], cfg, workload, prompts)
+        got = _arch_serve(engs["paged"], cfg, workload, prompts)
+        assert got == want
+        _check_pool_drained(engs["paged"])
+        _check_local_conservation(engs["paged"])
+
+    def test_long_decode_reclaims_but_never_grows(self, gemma_engines):
+        """A single long decode holds a constant ~R local pages while
+        continuously freeing dead ones — paged residency is bounded by
+        the window, not the sequence."""
+        cfg, engs = gemma_engines
+        eng = engs["paged"]
+        eng.reset()
+        prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=50))
+        fin: list = []
+        max_held = 0
+        while eng.step(fin):
+            held = eng.cache.num_local_pages - eng.cache.n_free_local
+            max_held = max(max_held, held)
+            _check_local_conservation(eng)
+        assert len(fin) == 1 and len(fin[0].generated) == 50
+        # One slot live: exactly one ring held, never more.
+        assert max_held == eng.local_ring
+        # 50+ decoded positions over 16-token windows: multiple blocks
+        # died and were reclaimed.
+        assert eng.stats["engine"]["window_pages_reclaimed"] >= 3
+        _check_pool_drained(eng)
+
+
+@pytest.fixture(scope="module", params=["recurrentgemma-2b", "rwkv6-3b"])
+def recurrent_engines(request):
+    cfg = smoke_config(request.param)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, {
+        "slot": make_engine(cfg, params, kind="slot", max_slots=MAX_BATCH,
+                            max_seq=MAX_SEQ, window=WINDOW),
+        "paged": make_engine(cfg, params, kind="paged",
+                             max_slots=MAX_BATCH, max_seq=MAX_SEQ,
+                             window=WINDOW, page_size=PSZ),
+    }
+
+
+class TestRecurrentRollback:
+    """Recurrent family: preemption discards the slab state mid-stream
+    and resume re-prefills ``prompt + generated[:-1]`` — the recurrence
+    must replay to the identical state (prompts >= 3 keep the conv
+    tail inside the prompt)."""
+
+    @given(lens=st.lists(st.sampled_from([3, 5, 8, 9, 15, 17]),
+                         min_size=2, max_size=5),
+           budgets=st.lists(st.integers(1, 9), min_size=5, max_size=5),
+           storm_at=st.integers(1, 8), storm_n=st.integers(1, 2),
+           seed=SEEDS)
+    def test_preempt_resume_token_invisible(self, recurrent_engines, lens,
+                                            budgets, storm_at, storm_n,
+                                            seed):
+        cfg, engs = recurrent_engines
+        workload = list(zip(lens, budgets))
+        prompts = _prompts(workload, seed, cfg.vocab_size)
+        want = _arch_serve(engs["slot"], cfg, workload, prompts)
+        eng = engs["paged"]
+        eng.reset()
+        for rid, ((_, b), p) in enumerate(zip(workload, prompts)):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=b))
+        fin: list = []
+        steps = 0
+        while eng.step(fin) and steps < 4096:
+            steps += 1
+            if steps == storm_at:
+                eng.preempt(storm_n)
+        got = {r.rid: tuple(r.generated) for r in fin}
+        assert got == want
+        ext = eng.stats["engine"]
+        assert ext["slot_admits"] == len(workload) + ext["preemptions"]
+        _check_pool_drained(eng)
+
+
+@pytest.fixture(scope="module")
+def whisper_engines():
+    cfg = smoke_config("whisper-base")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, {
+        "slot": make_engine(cfg, params, kind="slot", max_slots=MAX_BATCH,
+                            max_seq=MAX_SEQ, window=WINDOW),
+        "paged": make_engine(cfg, params, kind="paged",
+                             max_slots=MAX_BATCH, max_seq=MAX_SEQ,
+                             window=WINDOW, page_size=PSZ),
+    }
+
+
+class TestCrossAttentionSharing:
+    """Enc-dec family: requests with byte-identical encoder features
+    map the same physical cross pages (refcounted, written once);
+    sharing must be token-invisible and drain with the pool."""
+
+    @given(n=st.integers(2, 4), share=st.booleans(),
+           budgets=st.lists(st.integers(1, 8), min_size=4, max_size=4),
+           seed=SEEDS)
+    def test_shared_features_dedup_cross_pages(self, whisper_engines, n,
+                                               share, budgets, seed):
+        cfg, engs = whisper_engines
+        rng = np.random.default_rng(seed)
+        workload = [(4 + int(rng.integers(0, 8)), budgets[i])
+                    for i in range(n)]
+        prompts = [rng.integers(0, cfg.vocab_size, size=s)
+                   .astype(np.int32) for s, _ in workload]
+        enc = _enc_features(cfg, n, seed=seed)
+        if share:
+            enc = [enc[0]] * n   # one clip, n decodes
+        want = _arch_serve(engs["slot"], cfg, workload, prompts, enc)
+        eng = engs["paged"]
+        got = _arch_serve(eng, cfg, workload, prompts, enc)
+        assert got == want
+        ext = eng.stats["engine"]
+        if share:
+            # Co-resident requests mapped the first admit's block by
+            # reference; serialized admissions (after every holder
+            # drained) legitimately re-admit.
+            assert ext["cross_shared"] + ext["cross_admits"] == n
+            assert ext["cross_admits"] < n or n > MAX_BATCH
+        else:
+            assert ext["cross_admits"] == n and ext["cross_shared"] == 0
+        _check_pool_drained(eng)
+
+    def test_cross_block_physically_shared_and_refcounted(
+            self, whisper_engines):
+        """White-box: two live requests with one clip hold one cross
+        block at refcount 2; the block frees only when both release."""
+        cfg, engs = whisper_engines
+        eng = engs["paged"]
+        eng.reset()
+        rng = np.random.default_rng(0)
+        clip = rng.standard_normal((cfg.enc_frames, cfg.frontend_dim)
+                                   ).astype(np.float32)
+        for rid in range(2):
+            eng.submit(Request(rid=rid, prompt=np.arange(
+                4, dtype=np.int32), max_new_tokens=6 + 4 * rid,
+                enc_embeds=clip))
+        fin: list = []
+        eng.step(fin)   # both admitted in the first window
+        b0, b1 = (eng.cache.cross_pages_of(s) for s in (0, 1))
+        assert b0 == b1 and b0, "clip must map one shared block"
+        assert all(eng.cache.cross_refcount(pg) == 2 for pg in b0)
+        while eng.step(fin):
+            pass
+        assert len(fin) == 2
+        _check_pool_drained(eng)

@@ -168,3 +168,75 @@ class TestChooseDecodeBatchCache:
             b2 = choose_decode_batch(19, cfg, 128)
         assert b1 == b2
         assert _rung_cycles.cache_info().hits > info0.hits
+
+
+class TestWindowedPromptBuckets:
+    """Satellite regressions for sliding-window prompt bucketing: long
+    prompts on LOCAL configs bucket like any other (the rolled-ring
+    prefill layout), and the fallback counter is distinct from a
+    first-seen bucket miss."""
+
+    @pytest.fixture(scope="class")
+    def gemma(self):
+        cfg = smoke_config("gemma3-1b")   # LOCAL x5 + ATTN, window 16
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_long_prompts_zero_post_warmup_compiles(self, gemma):
+        """Prompts longer than the sliding window used to fall off the
+        bucketed path (one exact-length compile per unique length);
+        they now bucket to 2^k clamped to max_seq, so a warmed engine
+        serves varied long prompts with zero prefill or decode
+        compiles."""
+        cfg, params = gemma
+        eng = make_engine(cfg, params, kind="slot", max_slots=4,
+                          max_seq=64, window=4)
+        eng.warmup()
+        assert cfg.sliding_window < 64   # the prompts must cross it
+        lens = [17, 20, 23, 24, 31, 33, 40, 47]
+        prompts = _prompts(lens, cfg.vocab_size, seed=7)
+        tokens = _run(eng, prompts, [4] * len(lens))
+        assert len(tokens) == len(lens)
+        ext = eng.stats["engine"]
+        # Every prompt landed in a warmup-enumerated bucket: no
+        # first-seen misses, no exact-length fallbacks, no compiles.
+        assert ext["prefill_bucket_fallbacks"] == 0
+        assert ext["prefill_bucket_misses"] == 0
+        assert ext["prefill_bucket_hits"] == len(lens)
+        assert eng.stats["decode_compiles"] == 0
+
+    def test_long_prompts_match_singleton_serves(self, gemma):
+        """The rolled-ring bucket layout is token-exact: batched long
+        prompts equal their single-request serves."""
+        cfg, params = gemma
+        lens = [17, 25, 33]
+        prompts = _prompts(lens, cfg.vocab_size, seed=11)
+        budgets = [6, 4, 5]
+        eng = make_engine(cfg, params, kind="slot", max_slots=3,
+                          max_seq=64, window=3)
+        batched = _run(eng, prompts, budgets)
+        alone = {}
+        for i in range(len(lens)):
+            single = make_engine(cfg, params, kind="slot", max_slots=1,
+                                 max_seq=64, window=3)
+            single.submit(Request(rid=i, prompt=prompts[i],
+                                  max_new_tokens=budgets[i]))
+            alone.update({c.rid: c.tokens for c in single.run(200)})
+        assert batched == alone
+
+    def test_fallbacks_counted_separately_from_misses(self, setup):
+        """Only prompts longer than the engine capacity fall back to
+        exact-length prefill; the counter is split from first-seen
+        bucket misses so capacity tuning can tell 'compiles once, then
+        hits' from 'compiles every time'."""
+        cfg, params = setup
+        eng = make_engine(cfg, params, kind="slot", max_slots=2,
+                          max_seq=32, window=2)
+        lens = [9, 12, 40, 45]   # 9/12 share the 16-bucket; 40/45 > cap
+        tokens = _run(eng, _prompts(lens, cfg.vocab_size, seed=2),
+                      [3, 3, 2, 2])
+        assert len(tokens) == 4
+        ext = eng.stats["engine"]
+        assert ext["prefill_bucket_misses"] == 1
+        assert ext["prefill_bucket_hits"] == 1
+        assert ext["prefill_bucket_fallbacks"] == 2
